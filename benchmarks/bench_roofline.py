@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run JSON artifacts (results/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(outdir: str = "results/dryrun_final",
+               mesh: str = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(outdir, mesh, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(outdir: str = "results/dryrun_final", quick: bool = False) -> List[Dict]:
+    rows = []
+    for cell in load_cells(outdir):
+        if cell.get("skipped"):
+            rows.append({"cell": f"{cell['arch']}:{cell['shape']}",
+                         "status": "SKIP"})
+            continue
+        if not cell.get("ok"):
+            rows.append({"cell": f"{cell['arch']}:{cell['shape']}",
+                         "status": "FAIL"})
+            continue
+        r = cell.get("roofline", {})
+        rows.append({
+            "cell": f"{cell['arch']}:{cell['shape']}",
+            "status": "OK",
+            "compute_ms": round(r.get("compute_s", 0) * 1e3, 3),
+            "memory_ms": round(r.get("memory_s", 0) * 1e3, 3),
+            "collective_ms": round(r.get("collective_s", 0) * 1e3, 3),
+            "bottleneck": r.get("bottleneck", "?"),
+            "mfu_bound": round(r.get("mfu_bound", 0), 4),
+            "fits_hbm": cell.get("fits_hbm"),
+        })
+    for row in rows:
+        print("  " + json.dumps(row))
+    return rows

@@ -1,0 +1,163 @@
+"""Parallel strategy comparison (paper Figures 8-15 analogues).
+
+Two parts:
+  (a) multi-device speedups of DR / DD / PD / DD-LPT / hybrid on 8 fake host
+      devices (subprocess — the main process keeps 1 device), including the
+      clustered-load case where LPT placement matters (Fig. 13 story), and
+      the DD overhead sweep (Fig. 9 story: decomposition multiplies work).
+  (b) the coloring/critical-path study (Fig. 12): naive 8-coloring vs
+      load-aware coloring T_inf on real instance point distributions, plus
+      list-schedule simulated speedups (Graham bound check).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import bench_suite, bucketing, coloring
+from repro.distributed import partition
+
+SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+
+_SUBPROC = r"""
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.core import Domain, pb, bench_suite
+from repro.distributed.stkde_dist import STRATEGIES
+
+suite = bench_suite(max_voxels=500_000, max_points=8_000)
+inst = suite[{name!r}]
+dom = inst.domain()
+pts = inst.points()
+
+def timeit(fn, reps=3):
+    out = fn(); jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter(); out = fn(); jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+seq = timeit(lambda: pb(pts, dom))
+rows = {{"instance": {name!r}, "seq_pb_sym_s": seq}}
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,)*2)
+want = np.asarray(pb(pts, dom))
+for strat in ("dr", "dd", "pd", "dd_lpt"):
+    fn = STRATEGIES[strat]
+    try:
+        t = timeit(lambda: fn(pts, dom, mesh))
+        got = np.asarray(fn(pts, dom, mesh))
+        ok = bool(np.abs(got - want).max() < 1e-5)
+        rows[strat + "_s"] = t
+        rows[strat + "_speedup"] = seq / t
+        rows[strat + "_correct"] = ok
+    except ValueError as e:
+        rows[strat + "_s"] = None
+        rows[strat + "_note"] = str(e)[:60]
+print("RESULT" + json.dumps(rows))
+"""
+
+
+def _run_sub(code: str, n_dev: int = 8) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            return json.loads(line[len("RESULT"):])
+    raise RuntimeError("no RESULT line:\n" + proc.stdout[-2000:])
+
+
+def run_speedups(instances=("Dengue_Lr-Hb", "PollenUS_Lr-Lb", "Flu_Mr-Hb"),
+                 quick=False) -> List[Dict]:
+    rows = []
+    for name in (instances[:1] if quick else instances):
+        r = _run_sub(_SUBPROC.format(name=name))
+        rows.append(r)
+        msg = ", ".join(
+            f"{s}={r.get(s + '_speedup'):.2f}x"
+            for s in ("dr", "dd", "pd", "dd_lpt")
+            if r.get(s + "_speedup") is not None
+        )
+        print(f"  {name}: seq={r['seq_pb_sym_s']:.3f}s  {msg}")
+    return rows
+
+
+def run_dd_overhead(name="PollenUS_Hr-Mb", decomps=(1, 2, 4, 8, 16)) -> List[
+        Dict]:
+    """Fig. 9: replication factor (= work overhead) vs decomposition size."""
+    suite = bench_suite(max_voxels=500_000, max_points=8_000)
+    inst = suite[name]
+    dom = inst.domain()
+    pts = inst.points()
+    rows = []
+    for d in decomps:
+        tile = (max(1, -(-dom.Gx // d)), max(1, -(-dom.Gy // d)), dom.Gt)
+        b = bucketing.bucket_points_overlap(pts, dom, tile)
+        rows.append({
+            "instance": name, "decomp": f"{d}x{d}x1",
+            "replication_factor": round(b.replication_factor, 3),
+        })
+        print(f"  {name} {d}x{d}: replication "
+              f"{b.replication_factor:.3f}x")
+    return rows
+
+
+def run_coloring_study(instances=("Dengue_Lr-Hb", "PollenUS_Hr-Mb",
+                                  "Flu_Mr-Hb"),
+                       decomp=(16, 16, 4), P=16) -> List[Dict]:
+    """Fig. 12/13: T_inf naive vs load-aware; simulated speedups; LPT."""
+    suite = bench_suite(max_voxels=500_000, max_points=8_000)
+    rows = []
+    for name in instances:
+        inst = suite[name]
+        dom = inst.domain()
+        pts = inst.points()
+        tile = (max(1, -(-dom.Gx // decomp[0])),
+                max(1, -(-dom.Gy // decomp[1])),
+                max(1, -(-dom.Gt // decomp[2])))
+        b = bucketing.bucket_points_home(pts, dom, tile)
+        loads = b.counts.reshape(-1).astype(float)
+        shape = b.ntiles
+        T1 = loads.sum()
+        naive = coloring.naive_coloring(shape)
+        smart = coloring.load_aware_coloring(shape, loads)
+        tinf_naive = coloring.critical_path(shape, naive, loads)
+        tinf_smart = coloring.critical_path(shape, smart, loads)
+        sim_naive = coloring.simulate_schedule(shape, naive, loads, P)
+        sim_smart = coloring.simulate_schedule(shape, smart, loads, P)
+        eff, rep = coloring.replicate_critical(shape, smart, loads, P)
+        tinf_rep = coloring.critical_path(shape, smart, eff)
+        lpt = partition.imbalance_stats(loads, P)
+        rows.append({
+            "instance": name,
+            "tinf_naive_pct": round(100 * tinf_naive / T1, 2),
+            "tinf_sched_pct": round(100 * tinf_smart / T1, 2),
+            "tinf_rep_pct": round(100 * tinf_rep / T1, 2),
+            "sim_speedup_naive": round(T1 / sim_naive, 2),
+            "sim_speedup_sched": round(T1 / sim_smart, 2),
+            "graham_bound_sched": round(
+                T1 / coloring.graham_bound(T1, tinf_smart, P), 2),
+            "lpt_imbalance": round(lpt["lpt_imbalance"], 3),
+            "block_imbalance": round(lpt["block_imbalance"], 3),
+            "replicated_tasks": int((rep > 1).sum()),
+        })
+        print(f"  {name}: T_inf {rows[-1]['tinf_naive_pct']}% -> "
+              f"{rows[-1]['tinf_sched_pct']}% (sched) -> "
+              f"{rows[-1]['tinf_rep_pct']}% (rep); sim speedup "
+              f"{rows[-1]['sim_speedup_naive']} -> "
+              f"{rows[-1]['sim_speedup_sched']}")
+    return rows

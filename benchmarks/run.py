@@ -1,0 +1,88 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+
+Sections:
+  table3     sequential algorithms (paper Table 3)
+  parallel   multi-device strategy speedups (Figs. 8/10/11/13/15)
+  ddover     DD decomposition overhead (Fig. 9)
+  coloring   critical path / scheduling study (Fig. 12)
+  kernel     Pallas tile-kernel structural benchmark
+  roofline   roofline table from dry-run artifacts (§Roofline)
+
+Output: ``name,us_per_call,derived`` CSV lines to stdout + JSON to
+results/bench/.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SECTIONS = ("table3", "parallel", "ddover", "coloring", "kernel", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=list(SECTIONS),
+                    choices=SECTIONS)
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    all_results = {}
+
+    if "table3" in args.only:
+        print("== table3: sequential algorithm comparison ==")
+        from benchmarks import bench_stkde_table3
+        all_results["table3"] = bench_stkde_table3.run(quick=args.quick)
+    if "parallel" in args.only:
+        print("== parallel: strategy speedups (8 devices) ==")
+        from benchmarks import bench_stkde_parallel
+        all_results["parallel"] = bench_stkde_parallel.run_speedups(
+            quick=args.quick)
+    if "ddover" in args.only:
+        print("== ddover: DD replication overhead (Fig 9) ==")
+        from benchmarks import bench_stkde_parallel
+        all_results["ddover"] = bench_stkde_parallel.run_dd_overhead()
+    if "coloring" in args.only:
+        print("== coloring: critical path & scheduling (Fig 12) ==")
+        from benchmarks import bench_stkde_parallel
+        all_results["coloring"] = bench_stkde_parallel.run_coloring_study()
+    if "kernel" in args.only:
+        print("== kernel: Pallas tile structure ==")
+        from benchmarks import bench_kernel
+        all_results["kernel"] = bench_kernel.run(quick=args.quick)
+    if "roofline" in args.only:
+        print("== roofline: dry-run derived table ==")
+        from benchmarks import bench_roofline
+        if os.path.isdir("results/dryrun/single"):
+            all_results["roofline"] = bench_roofline.run()
+        else:
+            print("  (no dry-run artifacts; run repro.launch.dryrun first)")
+
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(all_results, f, indent=1, default=float)
+
+    # required CSV summary: name,us_per_call,derived
+    print("\nname,us_per_call,derived")
+    for section, rows in all_results.items():
+        for r in rows:
+            name = r.get("instance") or r.get("cell") or r.get("bench") or \
+                r.get("decomp", "?")
+            t = None
+            for k in ("pb_sym_s", "seq_pb_sym_s", "scatter_pb_s"):
+                if r.get(k) is not None:
+                    t = r[k] * 1e6
+                    break
+            derived = (r.get("sym_speedup") or r.get("dr_speedup")
+                       or r.get("bottleneck") or r.get("mxu_fill")
+                       or r.get("replication_factor")
+                       or r.get("tinf_sched_pct") or "")
+            print(f"{section}:{name},{'' if t is None else round(t, 1)},"
+                  f"{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Config registry: the 10 assigned LM architectures + STKDE instances."""
+from .lm_archs import ARCHS, get_arch, reduced
+from repro.core.datasets import INSTANCES as STKDE_INSTANCES
+
+__all__ = ["ARCHS", "get_arch", "reduced", "STKDE_INSTANCES"]

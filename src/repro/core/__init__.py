@@ -1,0 +1,30 @@
+"""Core STKDE: the paper's contribution as composable JAX modules."""
+from .geometry import Domain, from_points
+from . import kernels_math
+from .vb import vb, vb_dec
+from .pb import pb, pb_sym, VARIANTS
+from . import bucketing
+from .datasets import (
+    STKDEInstance,
+    INSTANCES,
+    get_instance,
+    bench_suite,
+    clustered_events,
+)
+
+__all__ = [
+    "Domain",
+    "from_points",
+    "kernels_math",
+    "vb",
+    "vb_dec",
+    "pb",
+    "pb_sym",
+    "VARIANTS",
+    "bucketing",
+    "STKDEInstance",
+    "INSTANCES",
+    "get_instance",
+    "bench_suite",
+    "clustered_events",
+]

@@ -1,0 +1,66 @@
+"""Top-level STKDE public API: one call, strategy auto-selected.
+
+    from repro.core.api import stkde
+    grid = stkde(points, dom)                       # single device
+    grid = stkde(points, dom, mesh=mesh)            # auto strategy on mesh
+    grid = stkde(points, dom, mesh=mesh, strategy="pd")
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import Domain
+from . import kernels_math as km
+from .pb import pb as _pb
+from . import plan as _plan
+
+
+def stkde(
+    points,
+    dom: Domain,
+    mesh=None,
+    strategy: str = "auto",
+    axes: Tuple[str, str] = ("data", "model"),
+    rep_axis: Optional[str] = None,
+    ks: km.SpatialKernel = km.DEFAULT_KS,
+    kt: km.TemporalKernel = km.DEFAULT_KT,
+    use_tiled_kernel: bool = False,
+) -> jnp.ndarray:
+    """Space-time kernel density grid for ``points`` over ``dom``.
+
+    strategy: "auto" | "dr" | "dd" | "pd" | "dd_lpt" | "hybrid"
+              (single-device when mesh is None: scatter PB-SYM, or the
+              Pallas tiled kernel with use_tiled_kernel=True).
+    """
+    pts = np.asarray(points, dtype=np.float32)
+    if mesh is None:
+        if use_tiled_kernel:
+            from repro.kernels import stkde_tiled
+
+            return stkde_tiled(pts, dom, ks=ks, kt=kt)
+        return _pb(pts, dom, variant="sym", ks=ks, kt=kt)
+
+    from repro.distributed import STRATEGIES
+    from . import bucketing
+
+    if strategy == "auto":
+        A = mesh.shape[axes[0]]
+        B = mesh.shape[axes[1]]
+        shape = (
+            (mesh.shape[rep_axis], A, B) if rep_axis is not None else (A, B)
+        )
+        import math
+
+        tile = (math.ceil(dom.Gx / A), math.ceil(dom.Gy / B), dom.Gt)
+        loads = bucketing.bucket_points_home(pts, dom, tile).counts
+        strategy, _ = _plan.choose(dom, len(pts), shape, loads.reshape(-1))
+        if strategy == "hybrid" and rep_axis is None:
+            strategy = "pd"
+    fn = STRATEGIES[strategy]
+    kw = dict(axes=axes, ks=ks, kt=kt)
+    if strategy == "hybrid":
+        kw["rep_axis"] = rep_axis or "pod"
+    return fn(pts, dom, mesh, **kw)

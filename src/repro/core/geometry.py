@@ -1,0 +1,138 @@
+"""Domain / grid geometry for STKDE.
+
+Conventions (DESIGN.md §6):
+  * The domain is a box ``[ox, ox+gx) x [oy, oy+gy) x [ot, ot+gt)`` in
+    *domain space* (meters / days).
+  * Voxel ``(X, Y, T)`` samples the domain at its **center**
+    ``origin + (idx + 0.5) * res``.
+  * Uppercase = voxel space, lowercase = domain space (paper Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Discretized space-time domain.
+
+    Attributes mirror the paper's notation: ``g*`` domain extent, ``sres`` /
+    ``tres`` resolutions, ``G*`` grid extents in voxels, ``hs`` / ``ht``
+    bandwidths (domain space), ``Hs`` / ``Ht`` bandwidths in voxels.
+    """
+
+    gx: float
+    gy: float
+    gt: float
+    sres: float
+    tres: float
+    hs: float
+    ht: float
+    ox: float = 0.0
+    oy: float = 0.0
+    ot: float = 0.0
+
+    # ------------------------------------------------------------------ grid
+    @property
+    def Gx(self) -> int:
+        return max(1, math.ceil(self.gx / self.sres))
+
+    @property
+    def Gy(self) -> int:
+        return max(1, math.ceil(self.gy / self.sres))
+
+    @property
+    def Gt(self) -> int:
+        return max(1, math.ceil(self.gt / self.tres))
+
+    @property
+    def grid_shape(self) -> Tuple[int, int, int]:
+        return (self.Gx, self.Gy, self.Gt)
+
+    @property
+    def Hs(self) -> int:
+        return max(1, math.ceil(self.hs / self.sres))
+
+    @property
+    def Ht(self) -> int:
+        return max(1, math.ceil(self.ht / self.tres))
+
+    @property
+    def grid_voxels(self) -> int:
+        return self.Gx * self.Gy * self.Gt
+
+    @property
+    def grid_mbytes(self) -> float:
+        return self.grid_voxels * 4 / 2**20
+
+    @property
+    def cylinder_voxels(self) -> int:
+        """Voxels in one point's bounding box (2Hs+1)^2 x (2Ht+1)."""
+        return (2 * self.Hs + 1) ** 2 * (2 * self.Ht + 1)
+
+    # ------------------------------------------------------- transformations
+    def voxel_centers_x(self) -> jnp.ndarray:
+        return self.ox + (jnp.arange(self.Gx, dtype=jnp.float32) + 0.5) * self.sres
+
+    def voxel_centers_y(self) -> jnp.ndarray:
+        return self.oy + (jnp.arange(self.Gy, dtype=jnp.float32) + 0.5) * self.sres
+
+    def voxel_centers_t(self) -> jnp.ndarray:
+        return self.ot + (jnp.arange(self.Gt, dtype=jnp.float32) + 0.5) * self.tres
+
+    def point_voxels(self, pts: jnp.ndarray) -> jnp.ndarray:
+        """Map points ``(n, 3)`` [x, y, t] -> integer voxel indices ``(n, 3)``.
+
+        Clipped into the grid so every point has a well-defined home voxel.
+        """
+        hi = jnp.asarray(
+            [self.Gx - 1, self.Gy - 1, self.Gt - 1], dtype=jnp.int32
+        )
+        return jnp.clip(self.point_voxels_unclipped(pts), 0, hi)
+
+    def point_voxels_unclipped(self, pts: jnp.ndarray) -> jnp.ndarray:
+        """Voxel indices that may lie outside the grid (for subdomain views:
+        a point outside a local domain still radiates density into it)."""
+        scale = jnp.asarray([self.sres, self.sres, self.tres], dtype=pts.dtype)
+        orig = jnp.asarray([self.ox, self.oy, self.ot], dtype=pts.dtype)
+        return jnp.floor((pts - orig) / scale).astype(jnp.int32)
+
+    def with_bandwidth(self, hs: float, ht: float) -> "Domain":
+        return dataclasses.replace(self, hs=hs, ht=ht)
+
+    def with_resolution(self, sres: float, tres: float) -> "Domain":
+        return dataclasses.replace(self, sres=sres, tres=tres)
+
+    # ------------------------------------------------------------- reporting
+    def describe(self) -> str:
+        return (
+            f"grid {self.Gx}x{self.Gy}x{self.Gt} ({self.grid_mbytes:.0f} MB)"
+            f" Hs={self.Hs} Ht={self.Ht} cyl={self.cylinder_voxels} vox"
+        )
+
+
+def from_points(
+    pts: np.ndarray, sres: float, tres: float, hs: float, ht: float
+) -> Domain:
+    """Build a Domain whose box is the bounding box of ``pts`` (+1 voxel pad)."""
+    pts = np.asarray(pts)
+    lo = pts.min(axis=0)
+    hi = pts.max(axis=0)
+    span = np.maximum(hi - lo, [sres, sres, tres])
+    return Domain(
+        gx=float(span[0] + sres),
+        gy=float(span[1] + sres),
+        gt=float(span[2] + tres),
+        sres=sres,
+        tres=tres,
+        hs=hs,
+        ht=ht,
+        ox=float(lo[0]),
+        oy=float(lo[1]),
+        ot=float(lo[2]),
+    )

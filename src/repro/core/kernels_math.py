@@ -1,0 +1,62 @@
+"""Kernel (distance-decay) functions for STKDE.
+
+The paper's inline formulas are typo'd versions of the product Epanechnikov
+kernels used by the gold standard it cites ([HDTC16], [NY10]); we implement
+the literature forms (DESIGN.md §1):
+
+    ks(u, v) = 2/pi * (1 - (u^2 + v^2))^2        for u^2 + v^2 < 1, else 0
+    kt(w)    = 3/4  * (1 - w^2)                  for |w| < 1,       else 0
+
+Both are kept pluggable: every algorithm takes ``spatial_kernel`` /
+``temporal_kernel`` callables so alternative kernels (paper-verbatim,
+Gaussian-truncated, ...) can be swapped in. The structural property every
+algorithm relies on is *separability*:
+``contribution(X, Y, T) = Ks(X, Y) * Kt(T)``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+SpatialKernel = Callable[[Array, Array], Array]
+TemporalKernel = Callable[[Array], Array]
+
+
+def ks_epanechnikov(u: Array, v: Array) -> Array:
+    """2-D quartic (Epanechnikov-type) spatial kernel, zero outside unit disk."""
+    r2 = u * u + v * v
+    val = (2.0 / jnp.pi) * jnp.square(1.0 - r2)
+    return jnp.where(r2 < 1.0, val, 0.0)
+
+
+def kt_epanechnikov(w: Array) -> Array:
+    """1-D Epanechnikov temporal kernel, zero outside |w| < 1."""
+    val = 0.75 * (1.0 - w * w)
+    return jnp.where(jnp.abs(w) < 1.0, val, 0.0)
+
+
+def ks_paper_verbatim(u: Array, v: Array) -> Array:
+    """The paper's inline formula, kept for completeness/ablation.
+
+    ``pi/2 (1-u)^2 (1-v)^2`` with the support restricted (as the paper's
+    summation condition says) to the unit disk.
+    """
+    r2 = u * u + v * v
+    val = (jnp.pi / 2.0) * jnp.square(1.0 - u) * jnp.square(1.0 - v)
+    return jnp.where(r2 < 1.0, val, 0.0)
+
+
+def kt_paper_verbatim(w: Array) -> Array:
+    val = 0.75 * jnp.square(1.0 - w)
+    return jnp.where(jnp.abs(w) < 1.0, val, 0.0)
+
+
+DEFAULT_KS: SpatialKernel = ks_epanechnikov
+DEFAULT_KT: TemporalKernel = kt_epanechnikov
+
+
+def normalization(n: int, hs: float, ht: float) -> float:
+    """1 / (n hs^2 ht) — folded into Ks by the PB-SYM algorithms."""
+    return 1.0 / (float(n) * hs * hs * ht)

@@ -1,0 +1,156 @@
+"""Parametric strategy planner — the paper's §6.5 future work, implemented.
+
+"What we need to do is to develop a parametric model for the problem that
+ will take into account memory availability, cost of memory initialization,
+ expected cost of computing the kernel density. Using that model finding the
+ best execution strategy becomes a combinatorial problem."
+
+Given an instance (grid, bandwidths, point loads) and a device mesh, this
+module prices every strategy with a three-term model (the same decomposition
+the roofline analysis uses):
+
+    time = init(HBM memset)  +  point-work(FLOPs, x imbalance)  +  collectives
+
+and returns the argmin. Hardware constants default to TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .geometry import Domain
+from . import bucketing
+from repro.distributed import partition
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12   # bf16 (MXU); fp32 VPU path derated below
+    hbm_bw: float = 819e9        # bytes/s
+    ici_bw: float = 50e9         # bytes/s/link
+    hbm_bytes: float = 16e9      # per chip
+    vpu_derate: float = 0.04     # scatter path ~ VPU: few % of MXU peak
+    mxu_derate: float = 0.5      # tile-GEMM path: realistic MXU fraction
+
+
+V5E = Hardware()
+
+
+def _point_work_flops(dom: Domain, n_eff: float) -> float:
+    """PB-SYM flops: disk eval + bar eval + cylinder outer-product FMA."""
+    disk = (2 * dom.Hs + 1) ** 2
+    bar = 2 * dom.Ht + 1
+    return n_eff * (disk * 10.0 + bar * 5.0 + disk * bar * 2.0)
+
+
+def estimate(
+    dom: Domain,
+    n: int,
+    mesh_shape: Tuple[int, ...],
+    loads: Optional[np.ndarray] = None,
+    hw: Hardware = V5E,
+    use_mxu: bool = True,
+) -> Dict[str, Dict[str, float]]:
+    """Per-strategy cost breakdown in seconds. mesh_shape=(A, B) or (R, A, B)."""
+    if len(mesh_shape) == 3:
+        R, A, B = mesh_shape
+    else:
+        R, (A, B) = 1, mesh_shape
+    P = R * A * B
+    Gb = dom.grid_voxels * 4.0                      # grid bytes
+    gx_loc = math.ceil(dom.Gx / A)
+    gy_loc = math.ceil(dom.Gy / B)
+    sub_b = gx_loc * gy_loc * dom.Gt * 4.0
+    halo_b = 2 * (gx_loc + gy_loc + 2 * dom.Hs) * dom.Hs * dom.Gt * 4.0
+    compute_rate = hw.peak_flops * (
+        hw.mxu_derate if use_mxu else hw.vpu_derate
+    )
+
+    # overlap replication factor (cut cylinders) for DD-style strategies
+    tiles_per_dim_x = max(1.0, gx_loc / (2 * dom.Hs + 1))
+    rep_dd = (1 + 1 / tiles_per_dim_x) * (
+        1 + 1 / max(1.0, gy_loc / (2 * dom.Hs + 1))
+    )
+
+    # imbalance: measured from per-bucket loads when available
+    if loads is not None:
+        stats_ab = partition.imbalance_stats(loads, A * B)
+        imb_block = stats_ab["block_imbalance"]
+        imb_lpt = stats_ab["lpt_imbalance"]
+    else:
+        imb_block, imb_lpt = 2.5, 1.05              # pessimistic defaults
+
+    w = _point_work_flops(dom, float(n))
+    out: Dict[str, Dict[str, float]] = {}
+
+    def entry(init_b, flops, imb, comm_b, mem_b, note=""):
+        return {
+            "init_s": init_b / hw.hbm_bw,
+            "compute_s": flops * imb / (P * compute_rate),
+            "comm_s": comm_b / hw.ici_bw,
+            "mem_per_dev_gb": mem_b / 1e9,
+            "feasible": float(mem_b < hw.hbm_bytes),
+            "total_s": init_b / hw.hbm_bw
+            + flops * imb / (P * compute_rate)
+            + comm_b / hw.ici_bw,
+        }
+
+    # DR: full grid per device; ring all-reduce ~ 2*Gb*(P-1)/P per device
+    out["dr"] = entry(Gb, w, 1.0, 2 * Gb * (P - 1) / P, 2 * Gb)
+    # DD: subgrid per device; replicated points; no comm
+    out["dd"] = entry(sub_b, w * rep_dd, imb_block, 0.0, sub_b)
+    # PD: halo-extended subgrid; halo exchange; work-efficient
+    pd_feasible = gx_loc >= dom.Hs and gy_loc >= dom.Hs
+    out["pd"] = entry(
+        (gx_loc + 2 * dom.Hs) * (gy_loc + 2 * dom.Hs) * dom.Gt * 4.0,
+        w,
+        imb_block,
+        halo_b,
+        sub_b * 2,
+    )
+    out["pd"]["feasible"] *= float(pd_feasible)
+    # PD-XT: split (X, T) — temporal halos are Ht-wide (cheap for
+    # long-duration instances); Y unsharded.
+    gt_loc = math.ceil(dom.Gt / B)
+    halo_xt = 2 * (dom.Hs * dom.Gy * (gt_loc + 2 * dom.Ht)
+                   + dom.Ht * gx_loc * dom.Gy) * 4.0
+    out["pd_xt"] = entry(
+        (gx_loc + 2 * dom.Hs) * dom.Gy * (gt_loc + 2 * dom.Ht) * 4.0,
+        w,
+        imb_block,
+        halo_xt,
+        gx_loc * dom.Gy * gt_loc * 4.0 * 2,
+    )
+    out["pd_xt"]["feasible"] *= float(
+        gx_loc >= dom.Hs and gt_loc >= dom.Ht)
+    # DD-LPT: full grid per device (tile soup assembly via psum)
+    out["dd_lpt"] = entry(
+        Gb, w * rep_dd, imb_lpt, 2 * Gb * (P - 1) / P, 2 * Gb
+    )
+    # hybrid (R-way REP over PD): psum of subgrids over R + halo
+    out["hybrid"] = entry(
+        (gx_loc + 2 * dom.Hs) * (gy_loc + 2 * dom.Hs) * dom.Gt * 4.0,
+        w,
+        max(1.0, imb_block / R),
+        halo_b + 2 * sub_b * (R - 1) / R,
+        sub_b * 2,
+    )
+    out["hybrid"]["feasible"] *= float(pd_feasible)
+    return out
+
+
+def choose(
+    dom: Domain,
+    n: int,
+    mesh_shape: Tuple[int, ...],
+    loads: Optional[np.ndarray] = None,
+    hw: Hardware = V5E,
+) -> Tuple[str, Dict[str, Dict[str, float]]]:
+    """Best feasible strategy and the full cost table."""
+    table = estimate(dom, n, mesh_shape, loads, hw)
+    feas = {k: v for k, v in table.items() if v["feasible"] > 0}
+    pick = min(feas or table, key=lambda k: (feas or table)[k]["total_s"])
+    return pick, table

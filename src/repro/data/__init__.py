@@ -1,0 +1,2 @@
+"""Data pipelines: deterministic synthetic LM stream + STKDE point streams."""
+from .pipeline import DataConfig, SyntheticLM, stkde_stream

@@ -1,0 +1,20 @@
+"""Distributed STKDE strategies and placement machinery (shard_map)."""
+from . import partition
+from .stkde_dist import (
+    stkde_dr,
+    stkde_dd,
+    stkde_pd,
+    stkde_dd_lpt,
+    stkde_hybrid,
+    STRATEGIES,
+)
+
+__all__ = [
+    "partition",
+    "stkde_dr",
+    "stkde_dd",
+    "stkde_pd",
+    "stkde_dd_lpt",
+    "stkde_hybrid",
+    "STRATEGIES",
+]

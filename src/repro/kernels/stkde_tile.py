@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: PB-SYM tile accumulation as an MXU contraction.
+
+The paper's PB-SYM observation — each point's contribution factors into a
+spatial disk ``Ks[X, Y]`` and a temporal bar ``Kt[T]`` — is, on TPU, a
+*structure*-exposing trick: for a grid tile and a panel of P candidate
+points,
+
+    density[bx, by, bt]  =  sum_p Ks_p[bx, by] * Kt_p[bt]
+                         =  reshape( Ksᵀ  @  Kt )
+                            with Ks: (P, bx*by), Kt: (P, bt)
+
+i.e. a GEMM contracting over the *point* dimension, executed on the MXU at
+197 TFLOP/s instead of a scalar scatter loop. VMEM tiling:
+
+  * the output tile (bx, by, bt) stays resident in VMEM across the whole
+    point stream (the paper's DD "cache fitting" insight, made explicit);
+  * candidate points arrive pre-bucketed per tile (host-side, DD-style
+    overlap bucketing — ``core/bucketing.py``) and are processed in
+    ``chunk``-sized panels so Ks panels fit VMEM.
+
+Grid = (ntx, nty, ntt) output tiles; x/y/t are embarrassingly parallel
+("parallel" dimension semantics; a megacore splits them).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.geometry import Domain
+from repro.core import kernels_math as km
+
+
+def _kernel(
+    pts_ref,    # (1, 1, 1, cap, 3) VMEM
+    valid_ref,  # (1, 1, 1, cap)    VMEM
+    out_ref,    # (bx, by, bt)      VMEM
+    *,
+    dom: Domain,
+    tile: Tuple[int, int, int],
+    cap: int,
+    chunk: int,
+    norm: float,
+    ks,
+    kt,
+):
+    bx, by, bt = tile
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    tk = pl.program_id(2)
+
+    # Voxel-center coordinates of this tile (2-D iota: TPU requires >=2D).
+    ix = jax.lax.broadcasted_iota(jnp.float32, (1, bx), 1)
+    iy = jax.lax.broadcasted_iota(jnp.float32, (1, by), 1)
+    it = jax.lax.broadcasted_iota(jnp.float32, (1, bt), 1)
+    xc = dom.ox + ((ti * bx).astype(jnp.float32) + ix + 0.5) * dom.sres
+    yc = dom.oy + ((tj * by).astype(jnp.float32) + iy + 0.5) * dom.sres
+    tc = dom.ot + ((tk * bt).astype(jnp.float32) + it + 0.5) * dom.tres
+
+    nchunks = cap // chunk
+
+    def body(c, acc):
+        sl = pl.dslice(c * chunk, chunk)
+        px = pts_ref[0, 0, 0, sl, 0]          # (chunk,)
+        py = pts_ref[0, 0, 0, sl, 1]
+        pt = pts_ref[0, 0, 0, sl, 2]
+        vld = valid_ref[0, 0, 0, sl]          # (chunk,)
+
+        u = (xc - px[:, None]) / dom.hs       # (chunk, bx)
+        v = (yc - py[:, None]) / dom.hs       # (chunk, by)
+        w = (tc - pt[:, None]) / dom.ht       # (chunk, bt)
+
+        Ks = ks(u[:, :, None], v[:, None, :]) * norm      # (chunk, bx, by)
+        Kt = kt(w) * vld[:, None]                          # (chunk, bt)
+
+        # MXU contraction over the point dimension.
+        panel = jax.lax.dot_general(
+            Ks.reshape(chunk, bx * by),
+            Kt,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (bx*by, bt)
+        return acc + panel
+
+    acc = jax.lax.fori_loop(
+        0, nchunks, body, jnp.zeros((bx * by, bt), dtype=jnp.float32)
+    )
+    out_ref[...] = acc.reshape(bx, by, bt)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dom", "tile", "cap", "chunk", "n_total", "ks", "kt", "interpret"
+    ),
+)
+def stkde_tiles_pallas(
+    pts_tiles: jnp.ndarray,    # (ntx, nty, ntt, cap, 3) f32
+    valid_tiles: jnp.ndarray,  # (ntx, nty, ntt, cap) f32
+    dom: Domain,
+    tile: Tuple[int, int, int],
+    cap: int,
+    n_total: int,
+    chunk: int = 256,
+    ks: km.SpatialKernel = km.DEFAULT_KS,
+    kt: km.TemporalKernel = km.DEFAULT_KT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Padded density grid (ntx*bx, nty*by, ntt*bt)."""
+    ntx, nty, ntt = pts_tiles.shape[:3]
+    bx, by, bt = tile
+    chunk = min(chunk, cap)
+    assert cap % chunk == 0, (cap, chunk)
+    norm = km.normalization(n_total, dom.hs, dom.ht)
+
+    kernel = functools.partial(
+        _kernel, dom=dom, tile=tile, cap=cap, chunk=chunk,
+        norm=norm, ks=ks, kt=kt,
+    )
+    grid = (ntx, nty, ntt)
+    out_shape = jax.ShapeDtypeStruct((ntx * bx, nty * by, ntt * bt),
+                                     jnp.float32)
+    fn = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, cap, 3), lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, cap), lambda i, j, k: (i, j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bx, by, bt), lambda i, j, k: (i, j, k)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(pts_tiles, valid_tiles)

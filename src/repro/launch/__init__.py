@@ -1,0 +1,6 @@
+"""Launch layer: mesh construction, dry-run, roofline, train/serve drivers.
+
+NOTE: do not import dryrun from here — it must be executed as a fresh
+process (it sets XLA_FLAGS before importing jax).
+"""
+from .mesh import make_production_mesh, make_host_mesh

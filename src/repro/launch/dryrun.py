@@ -1,0 +1,416 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``.lower().compile()`` must succeed on the 16x16 (256-chip) pod
+mesh and the 2x16x16 (512-chip) multi-pod mesh for every cell, and
+``memory_analysis()`` must fit a TPU v5e (16 GB/chip).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch NAME ...] [--shape NAME ...] [--mesh single|multi|both]
+        [--delta] [--stkde] [--out results/dryrun]
+
+Results are written incrementally (one JSON per cell) so the full matrix is
+resumable; --skip-existing continues an interrupted run.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_lib
+from repro.launch import roofline as rl
+from repro.distributed import sharding
+from repro.models import model as model_lib
+from repro.train import OptimizerConfig, optimizer as opt_lib
+from repro.train.train_step import make_train_step
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+# ------------------------------------------------------------- cell builders
+def build_train(cfg, mesh, shape):
+    ocfg = OptimizerConfig(total_steps=10_000)
+    step = make_train_step(cfg, ocfg)
+    params_abs = specs_lib.param_specs_abstract(cfg)
+    opt_abs = jax.eval_shape(opt_lib.init, params_abs)
+    batch_abs = specs_lib.train_input_specs(cfg, shape)
+
+    if cfg.train_parallelism == "fsdp":
+        p_specs = sharding.fsdp_only_param_specs(params_abs, mesh)
+        b_specs = sharding.data_specs(batch_abs, mesh, include_model=True)
+    else:
+        p_specs = sharding.param_specs(params_abs, mesh, fsdp=True)
+        b_specs = sharding.data_specs(batch_abs, mesh)
+    o_specs = opt_lib.OptState(
+        mu=p_specs, nu=p_specs,
+        step=jax.sharding.PartitionSpec(),
+    )
+    in_shardings = (
+        sharding.make_sharding(p_specs, mesh),
+        sharding.make_sharding(o_specs, mesh),
+        sharding.make_sharding(b_specs, mesh),
+    )
+
+    def hinted(params, opt_state, batch):
+        with sharding.hint_mesh(mesh):
+            return step(params, opt_state, batch)
+
+    fn = jax.jit(hinted, in_shardings=in_shardings)
+    return fn, (params_abs, opt_abs, batch_abs)
+
+
+def build_prefill(cfg, mesh, shape):
+    params_abs = specs_lib.param_specs_abstract(cfg)
+    inputs = specs_lib.prefill_input_specs(cfg, shape)
+    fsdp = _serve_fsdp(cfg, mesh)
+    p_specs = sharding.param_specs(params_abs, mesh, fsdp=fsdp)
+    b_specs = sharding.data_specs(inputs, mesh)
+
+    def fn(params, batch):
+        kw = {k: v for k, v in batch.items() if k != "tokens"}
+        with sharding.hint_mesh(mesh):
+            return model_lib.prefill(cfg, params, batch["tokens"],
+                                     max_seq=shape.seq_len, **kw)
+
+    jitted = jax.jit(fn, in_shardings=(
+        sharding.make_sharding(p_specs, mesh),
+        sharding.make_sharding(b_specs, mesh),
+    ))
+    return jitted, (params_abs, inputs)
+
+
+def build_decode(cfg, mesh, shape):
+    params_abs = specs_lib.param_specs_abstract(cfg)
+    # serving weights are bf16 (a dedicated inference copy — halves the
+    # per-step HBM weight reads that dominate decode; §Perf extension)
+    params_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16)
+        if a.dtype == jnp.float32 and a.ndim >= 2 else a, params_abs)
+    io = specs_lib.decode_input_specs(cfg, shape)
+    fsdp = _serve_fsdp(cfg, mesh)
+    p_specs = sharding.param_specs(params_abs, mesh, fsdp=fsdp)
+    s_specs = sharding.decode_state_specs(cfg, io["state"], mesh)
+    t_specs = sharding.data_specs({"t": io["token"]}, mesh)["t"]
+
+    def fn(params, state, token):
+        with sharding.hint_mesh(mesh):
+            return model_lib.decode_step(cfg, params, token, state)
+
+    jitted = jax.jit(fn, in_shardings=(
+        sharding.make_sharding(p_specs, mesh),
+        sharding.make_sharding(s_specs, mesh),
+        jax.sharding.NamedSharding(mesh, t_specs),
+    ))
+    return jitted, (params_abs, io["state"], io["token"])
+
+
+def _serve_fsdp(cfg, mesh) -> bool:
+    """Serving shards params over data too when one TP shard won't fit."""
+    tp = mesh.shape.get("model", 1)
+    return cfg.param_count() * 4 / tp > 8e9
+
+
+# ------------------------------------------------------------------- runner
+def run_cell(arch: str, shape_name: str, mesh_kind: str, outdir: str,
+             delta: bool = False, skip_existing: bool = False) -> dict:
+    cfg = ARCHS[arch]
+    shape = specs_lib.SHAPES[shape_name]
+    tag = f"{mesh_kind}/{arch}__{shape_name}"
+    path = os.path.join(outdir, mesh_kind, f"{arch}__{shape_name}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "ok": False}
+    ok, why = specs_lib.cell_applicable(cfg, shape)
+    if not ok:
+        result.update(skipped=True, reason=why, ok=True)
+        _write(path, result)
+        print(f"[dryrun] {tag}: SKIP ({why})")
+        return result
+
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        chips = int(np.prod(list(mesh.shape.values())))
+        t0 = time.perf_counter()
+        fn, abstract = _build(cfg, mesh, shape)
+        lowered = fn.lower(*abstract)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = rl.parse_collective_bytes(compiled.as_text())
+        mem_d = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+        }
+        # argument/output sizes are per-device; temp is aggregated across
+        # the forced host devices (empirically verified) -> normalize.
+        n_dev = len(jax.devices())
+        mem_d["temp_per_device"] = mem_d["temp_size_in_bytes"] // max(
+            1, n_dev)
+        total_dev_bytes = (mem_d["argument_size_in_bytes"]
+                           + mem_d["temp_per_device"])
+        result.update(
+            ok=True,
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem_d,
+            fits_hbm=bool(total_dev_bytes < HBM_PER_CHIP),
+            cost={"flops": float(cost.get("flops", 0.0)),
+                  "bytes": _bytes_accessed(cost)},
+            collectives=coll,
+        )
+        mf = rl.model_flops_estimate(cfg, shape.kind, shape.seq_len,
+                                     shape.global_batch)
+        result["model_flops"] = mf
+        result["algo_flops"] = rl.algo_flops(
+            cfg, shape.kind, shape.seq_len, shape.global_batch)
+        result["algo_hbm_bytes"] = rl.algo_hbm_bytes(
+            cfg, shape.kind, shape.seq_len, shape.global_batch)
+        if delta:
+            result["delta"] = _depth_delta(cfg, mesh, shape)
+        _finalize_roofline(result, cfg, chips)
+        print(f"[dryrun] {tag}: OK compile={t_compile:.1f}s "
+              f"mem/dev={total_dev_bytes / 1e9:.2f}GB "
+              f"coll/dev={coll['total'] / 1e9:.3f}GB")
+    except Exception as e:
+        result.update(error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+    _write(path, result)
+    return result
+
+
+def _build(cfg, mesh, shape):
+    if shape.kind == "train":
+        return build_train(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    return build_decode(cfg, mesh, shape)
+
+
+def _bytes_accessed(cost: dict) -> float:
+    return float(sum(v for k, v in cost.items()
+                     if k.startswith("bytes accessed")))
+
+
+def _depth_delta(cfg, mesh, shape) -> dict:
+    """Compile unrolled shallow twins to correct scan-once cost counting."""
+    p = max(1, cfg.shared_attn_every)
+    r = cfg.first_dense_layers
+    d1, d2 = r + p, r + 2 * p
+    out = {}
+    for d in (d1, d2):
+        sub = cfg.replace(n_layers=d, scan_layers=False,
+                          n_enc_layers=min(d, cfg.n_enc_layers)
+                          if cfg.enc_dec else 0)
+        fn, abstract = _build(sub, mesh, shape)
+        compiled = fn.lower(*abstract).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = rl.parse_collective_bytes(compiled.as_text())
+        out[f"d{d}"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": _bytes_accessed(cost),
+            "coll": coll["total"],
+        }
+    L = cfg.n_layers
+    out["extrapolated"] = {
+        k: rl.delta_extrapolate(out[f"d{d1}"][k], out[f"d{d2}"][k],
+                                d1, d2, L)
+        for k in ("flops", "bytes", "coll")
+    }
+    out["depths"] = [d1, d2]
+    return out
+
+
+def _finalize_roofline(result: dict, cfg, chips: int):
+    """Three-term roofline.
+
+    FLOPs / HBM bytes: analytic implemented-algorithm accounting (raw HLO
+    numbers undercount while-loop bodies; the delta compiles correct the
+    layer loop and are recorded for cross-checking, but inner chunk scans
+    remain — see roofline.py docstring). Collectives: delta-corrected HLO
+    parse when available, else raw (collectives live outside inner scans).
+    """
+    flops = result["algo_flops"]
+    bts = result["algo_hbm_bytes"]
+    if "delta" in result:
+        coll = result["delta"]["extrapolated"]["coll"]
+    else:
+        coll = result["collectives"]["total"]
+    roof = rl.Roofline(
+        flops=flops, hbm_bytes=bts, coll_bytes_per_dev=coll, chips=chips,
+        model_flops=result.get("model_flops", 0.0),
+    )
+    result["roofline"] = roof.to_dict()
+    result["roofline_raw_hlo"] = rl.Roofline(
+        flops=result["cost"]["flops"], hbm_bytes=result["cost"]["bytes"],
+        coll_bytes_per_dev=result["collectives"]["total"], chips=chips,
+        model_flops=result.get("model_flops", 0.0),
+    ).to_dict()
+
+
+# -------------------------------------------------------------- STKDE cells
+def run_stkde_cell(instance_name: str, strategy: str, mesh_kind: str,
+                   outdir: str, skip_existing: bool = False) -> dict:
+    """Dry-run the paper's own technique at production scale."""
+    from repro.core.datasets import INSTANCES
+    from repro.distributed import stkde_dist as sd
+
+    inst = INSTANCES[instance_name]
+    dom = inst.domain()
+    tag = f"{mesh_kind}/stkde_{strategy}_{instance_name}"
+    path = os.path.join(outdir, mesh_kind,
+                        f"stkde_{strategy}__{instance_name}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    result = {"arch": f"stkde-{strategy}", "shape": instance_name,
+              "mesh": mesh_kind, "ok": False}
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        chips = int(np.prod(list(mesh.shape.values())))
+        axes = ("data", "model")
+        A, B = mesh.shape["data"], mesh.shape["model"]
+        import math
+
+        gx_loc = math.ceil(dom.Gx / A)
+        gy_loc = math.ceil(dom.Gy / B)
+        ntiles = A * B
+        cap = max(8, int(np.ceil(4.0 * inst.n / ntiles / 8)) * 8)
+        if strategy == "pd_xyt":
+            if mesh_kind != "multi":
+                result.update(skipped=True, ok=True,
+                              reason="3-axis decomposition needs the "
+                              "multi-pod mesh")
+                _write(path, result)
+                return result
+            ax3 = ("pod", "data", "model")
+            R = mesh.shape["pod"]
+            fn = sd.build_pd_xyt(dom, mesh, ax3, inst.n)
+            bp = jax.ShapeDtypeStruct((R, A, B, cap, 3), jnp.float32)
+            bv = jax.ShapeDtypeStruct((R, A, B, cap), jnp.float32)
+            abstract = (bp, bv)
+        elif strategy in ("pd", "pd_xt"):
+            rep = "pod" if mesh_kind == "multi" else None
+            builder = sd.build_pd_xt if strategy == "pd_xt" else sd.build_pd
+            fn = builder(dom, mesh, axes, inst.n, rep_axis=rep)
+            lead = (mesh.shape["pod"],) if rep else ()
+            bp = jax.ShapeDtypeStruct(lead + (A, B, cap, 3), jnp.float32)
+            bv = jax.ShapeDtypeStruct(lead + (A, B, cap), jnp.float32)
+            abstract = (bp, bv)
+        elif strategy == "dd":
+            fn = sd.build_dd(dom, mesh, axes, inst.n)
+            bp = jax.ShapeDtypeStruct((A, B, cap, 3), jnp.float32)
+            bv = jax.ShapeDtypeStruct((A, B, cap), jnp.float32)
+            abstract = (bp, bv)
+        else:  # dr
+            npad = int(np.ceil(inst.n / chips)) * chips
+            fn = sd.build_dr(dom, mesh, axes, inst.n)
+            abstract = (jax.ShapeDtypeStruct((npad, 3), jnp.float32),)
+        t0 = time.perf_counter()
+        compiled = fn.lower(*abstract).compile()
+        t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = rl.parse_collective_bytes(compiled.as_text())
+        total_dev = int(mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+        result.update(
+            ok=True, chips=chips, compile_s=round(t_compile, 2),
+            memory={"argument_size_in_bytes": int(
+                mem.argument_size_in_bytes),
+                "temp_size_in_bytes": int(mem.temp_size_in_bytes)},
+            fits_hbm=bool(total_dev < HBM_PER_CHIP),
+            cost={"flops": float(cost.get("flops", 0.0)),
+                  "bytes": _bytes_accessed(cost)},
+            collectives=coll,
+            grid_voxels=dom.grid_voxels, n_points=inst.n, cap=cap,
+        )
+        roof = rl.Roofline(
+            flops=result["cost"]["flops"], hbm_bytes=result["cost"]["bytes"],
+            coll_bytes_per_dev=coll["total"], chips=chips,
+            model_flops=2.0 * inst.n * dom.cylinder_voxels,
+        )
+        result["roofline"] = roof.to_dict()
+        print(f"[dryrun] {tag}: OK compile={t_compile:.1f}s "
+              f"mem/dev={total_dev / 1e9:.2f}GB")
+    except Exception as e:
+        result.update(error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+    _write(path, result)
+    return result
+
+
+def _write(path, obj):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    os.replace(tmp, path)
+
+
+STKDE_DRYRUN_INSTANCES = ["eBird_Hr-Hb", "eBird_Lr-Hb", "Flu_Hr-Hb",
+                          "PollenUS_VHr-Lb"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=sorted(ARCHS))
+    ap.add_argument("--shape", nargs="*", default=list(specs_lib.SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--delta", action="store_true",
+                    help="depth-delta scan-cost correction (extra compiles)")
+    ap.add_argument("--stkde", action="store_true",
+                    help="also dry-run STKDE strategies at production scale")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    failures = []
+    for mesh_kind in meshes:
+        for arch in args.arch:
+            for shape in args.shape:
+                r = run_cell(arch, shape, mesh_kind, args.out,
+                             delta=args.delta and mesh_kind == "single",
+                             skip_existing=args.skip_existing)
+                if not r.get("ok"):
+                    failures.append((mesh_kind, arch, shape))
+        if args.stkde:
+            for inst in STKDE_DRYRUN_INSTANCES:
+                strats = ("pd", "pd_xt", "dd") if mesh_kind == "single" \
+                    else ("pd", "pd_xt", "pd_xyt", "dd")
+                for strat in strats:
+                    r = run_stkde_cell(inst, strat, mesh_kind, args.out,
+                                       skip_existing=args.skip_existing)
+                    if not r.get("ok"):
+                        failures.append((mesh_kind, f"stkde-{strat}", inst))
+    print(f"\n[dryrun] done; {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""Production mesh construction (pure function — importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: pod = DCN data parallelism; data = ICI batch/FSDP; model = ICI TP.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(n_devices: int = 8, multi_pod: bool = False):
+    """Small-mesh twin for CPU tests (same axis names / code paths)."""
+    if multi_pod:
+        shape = (2, max(1, n_devices // 4), 2)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (max(1, n_devices // 2), 2)
+        axes = ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )

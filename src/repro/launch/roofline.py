@@ -1,0 +1,322 @@
+"""Roofline analysis from compiled AOT artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs      / (chips × 197 TFLOP/s)
+    memory     = HLO_bytes      / (chips × 819 GB/s)
+    collective = coll_bytes     / (chips × 50 GB/s/link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from the post-SPMD HLO text (result shapes × op-specific
+ring-traffic multipliers × replica-group sizes).
+
+Scan correction: XLA cost analysis counts a while-loop body ONCE, so
+scanned-over-layers models under-report by ~n_layers. The depth-delta method
+compiles the same cell with layers unrolled at two shallow depths d1 < d2
+and extrapolates  total(L) = f(d1) + (L - d1)/(d2 - d1) × (f(d2) - f(d1)) —
+exact for homogeneous stacks, and exact-per-period for zamba2's
+every-6-layers shared-attention pattern when d2 - d1 is one period.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# ------------------------------------------------------ hardware constants
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device link traffic (bytes) by collective kind.
+
+    Post-SPMD HLO carries per-device shapes. Ring-model per-device traffic:
+      all-reduce      2·S·(G-1)/G          (reduce-scatter + all-gather)
+      all-gather      S·(G-1)/G            (S = gathered result)
+      reduce-scatter  S·(G-1)               (S = scattered shard)
+      all-to-all      S·(G-1)/G
+      collective-permute  S                 (one neighbor hop)
+    """
+    out: Dict[str, float] = {
+        "all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0,
+    }
+    counts: Dict[str, int] = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        size = _shape_bytes(dtype, dims)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if kind == "all-reduce":
+            traffic = 2 * size * (g - 1) / max(g, 1)
+        elif kind == "all-gather":
+            traffic = size * (g - 1) / max(g, 1)
+        elif kind == "reduce-scatter":
+            traffic = size * (g - 1)
+        elif kind == "all-to-all":
+            traffic = size * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            traffic = size
+        out[kind] += traffic
+        counts[kind] += 1
+    out["total"] = sum(out.values())
+    out["n_ops"] = sum(counts.values())
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # whole-program FLOPs (all chips)
+    hbm_bytes: float          # whole-program HBM traffic (all chips)
+    coll_bytes_per_dev: float
+    chips: int
+    model_flops: float = 0.0  # analytic 6ND
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # per-device traffic / per-link bandwidth == total/(chips·links)
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap bound: the max term (perfect overlap of the rest)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-implied MFU: useful flops / (chips · peak · step_time)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def algo_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """FLOPs of the *implemented* algorithm (fwd; train = 3x).
+
+    Needed because XLA cost_analysis counts while-loop bodies once: the
+    layer scan is corrected by the depth-delta compiles, but inner chunk
+    scans (flash attention, SSD, RWKV) would still undercount, so the
+    compute roofline term uses this analytic accounting (cross-checked
+    against the delta-corrected HLO numbers in EXPERIMENTS.md).
+    """
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    decode = shape_kind == "decode"
+    tokens = batch * (1 if decode else seq)
+    ctx = seq                                # cache length for decode
+
+    per_tok = 0.0
+    # ---- token mixer
+    if cfg.mixer == "attn":
+        if cfg.mla:
+            r, dn, dr_, dv = (cfg.kv_lora, cfg.qk_nope_dims,
+                              cfg.qk_rope_dims, cfg.v_head_dim)
+            per_tok += 2 * D * H * (dn + dr_) + 2 * D * (r + dr_)
+            if decode:
+                per_tok += 2 * H * dn * r + 2 * H * r * dv
+                per_tok += 2 * ctx * H * (r + dr_) + 2 * ctx * H * r
+            else:
+                per_tok += 2 * r * H * (dn + dv)
+                per_tok += 0.5 * (2 * ctx * H * (dn + dr_)
+                                  + 2 * ctx * H * dv) * 2
+            per_tok += 2 * H * dv * D
+        else:
+            per_tok += 2 * D * H * dh + 4 * D * Hkv * dh + 2 * H * dh * D
+            eff_ctx = ctx if not cfg.sliding_window else min(
+                ctx, cfg.sliding_window)
+            att = 4 * eff_ctx * H * dh            # scores + AV
+            per_tok += att if decode else 0.5 * att
+    elif cfg.mixer == "mamba2":
+        di, N, P_ = cfg.d_inner_ssm, cfg.ssm_state, cfg.ssm_head_dim
+        Hs_ = cfg.n_ssm_heads
+        G = cfg.ssm_groups
+        per_tok += 2 * D * (2 * di + 2 * G * N + Hs_) + 2 * di * D
+        Q = 1 if decode else cfg.ssd_chunk
+        per_tok += Hs_ * (2 * Q * N + 2 * Q * P_ + 4 * N * P_)
+    elif cfg.mixer == "rwkv6":
+        dh6 = 64
+        H6 = D // dh6
+        per_tok += 5 * 2 * D * D + 2 * D * (32 * 8 + 64 * 2)
+        T = 1 if decode else cfg.rwkv_chunk
+        per_tok += H6 * (5 * T * dh6 + 4 * dh6 * dh6)
+    # ---- shared attention (zamba2)
+    if cfg.shared_attn_every > 0:
+        frac = cfg.attn_sites / L
+        att_proj = 2 * D * H * dh + 4 * D * Hkv * dh + 2 * H * dh * D
+        att_ctx = 4 * ctx * H * dh
+        per_tok += frac * (att_proj + (att_ctx if decode else 0.5 * att_ctx))
+    # ---- channel mixer
+    if cfg.mlp == "swiglu":
+        per_tok += 6 * D * F
+    elif cfg.mlp == "gelu":
+        per_tok += 4 * D * F
+    elif cfg.mlp == "moe":
+        Fe = cfg.d_ff_expert
+        per_tok += 2 * D * cfg.n_experts
+        per_tok += 6 * D * Fe * cfg.top_k * cfg.capacity_factor
+        per_tok += 6 * D * Fe * cfg.n_shared_experts
+    elif cfg.mlp == "rwkv6_cmix":
+        per_tok += 2 * D * F * 2 + 2 * D * D
+    # ---- cross attention (whisper decoder)
+    enc_flops = 0.0
+    if cfg.enc_dec:
+        per_tok += 6 * D * D + 2 * D * D            # q,o + probs paths
+        per_tok += 4 * cfg.enc_seq * H * dh
+        enc_per_tok = (8 * D * D + 4 * cfg.enc_seq * H * dh * 0.5
+                       + 4 * D * F)
+        if not decode:   # encoder runs on train/prefill only
+            enc_flops = (batch * cfg.enc_seq * enc_per_tok
+                         * cfg.n_enc_layers)
+        # cross-KV projection of encoder states (prefill)
+        if not decode:
+            enc_flops += batch * cfg.enc_seq * 4 * D * D * L
+
+    total = tokens * per_tok * L + enc_flops
+    total += tokens * 2 * D * V                     # logits
+    if shape_kind == "train":
+        total *= 3.0                                # fwd + bwd
+    return total
+
+
+def algo_hbm_bytes(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """Analytic lower bound on HBM traffic per step (bytes, all chips)."""
+    P_ = cfg.param_count()
+    decode = shape_kind == "decode"
+    tokens = batch * (1 if decode else seq)
+    D, L = cfg.d_model, cfg.n_layers
+    if shape_kind == "train":
+        # params fp32 r/w + adam moments r/w + grads + bf16 cast reads
+        par = P_ * (4 + 4 + 16 + 4 + 2)
+        act = tokens * D * L * 12 * 2               # remat-era activations
+        return par + act
+    # inference: one pass over the (active) params (bf16 serving copy)
+    # + cache traffic
+    par = cfg.active_param_count() * 2
+    if cfg.mixer == "attn":
+        per_tok_cache = (2 * cfg.n_kv_heads * cfg.head_dim * 2
+                         if not cfg.mla
+                         else (cfg.kv_lora + cfg.qk_rope_dims) * 2)
+        cache = batch * seq * per_tok_cache * L * (1 if decode else 1)
+    else:
+        cache = batch * L * 1e6 * 0  # state caches are negligible
+        if cfg.shared_attn_every:
+            cache = (batch * seq * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+                     * cfg.attn_sites)
+    act = tokens * D * L * 8 * 2
+    return par + cache + act
+
+
+def model_flops_estimate(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """Analytic 'useful' FLOPs: 6·N_active·D for train, 2·N_active·D for
+    inference (+ attention score terms for full-attn archs)."""
+    n_active = cfg.active_param_count()
+    tokens = batch * seq if shape_kind in ("train", "prefill") else batch
+    mult = 6.0 if shape_kind == "train" else 2.0
+    base = mult * n_active * tokens
+    # quadratic attention term (full-attn archs): 2·2·S²·D_attn per example
+    if cfg.mixer == "attn":
+        h_dim = cfg.n_heads * cfg.head_dim
+        if shape_kind in ("train", "prefill"):
+            att = 2 * 2 * seq * seq * h_dim * cfg.n_layers * batch
+            att *= 3 if shape_kind == "train" else 1      # fwd+bwd
+        else:
+            att = 2 * 2 * seq * h_dim * cfg.n_layers * batch
+        base += att
+    return base
+
+
+def delta_extrapolate(f_d1: float, f_d2: float, d1: int, d2: int,
+                      L: int) -> float:
+    """total(L) = f(d1) + (L-d1)/(d2-d1) · (f(d2)-f(d1)).
+
+    Clamped non-negative and to at least max(f_d1, f_d2): compile-to-compile
+    variance can make f(d2) < f(d1) (XLA folds a collective differently),
+    and a negative slope extrapolated by L layers would go below zero.
+    """
+    if d2 == d1:
+        return f_d1
+    est = f_d1 + (L - d1) / (d2 - d1) * (f_d2 - f_d1)
+    return max(est, f_d1, f_d2, 0.0)
+
+
+def format_table(rows: list, keys: list) -> str:
+    widths = {k: max(len(k), *(len(str(r.get(k, ""))) for r in rows))
+              for k in keys}
+    line = " | ".join(k.ljust(widths[k]) for k in keys)
+    sep = "-+-".join("-" * widths[k] for k in keys)
+    body = "\n".join(
+        " | ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys)
+        for r in rows
+    )
+    return f"{line}\n{sep}\n{body}"

@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape_name)`` returns abstract inputs only — weak-type
+correct, shardable, zero device allocation (the shannon/kernels pattern).
+
+Shape cells (LM transformers): train_4k / prefill_32k / decode_32k /
+long_500k — see SHAPES. ``decode_*`` / ``long_*`` lower ``serve_step``
+(one token against a seq_len cache), not ``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg, shape: ShapeCell) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "full-attention arch: 500k-context decode is skipped per "
+            "assignment note (sub-quadratic archs only)"
+        )
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg, shape: ShapeCell) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    extra = {}
+    s_text = S
+    if cfg.frontend == "vision":
+        s_text = S - cfg.n_vision_tokens
+        extra["vision_embeds"] = _sds(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.enc_dec:
+        extra["audio_frames"] = _sds(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+        )
+    return {
+        "tokens": _sds((B, s_text), jnp.int32),
+        "labels": _sds((B, s_text), jnp.int32),
+        **extra,
+    }
+
+
+def prefill_input_specs(cfg, shape: ShapeCell) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.frontend == "vision":
+        out["tokens"] = _sds((B, S - cfg.n_vision_tokens), jnp.int32)
+        out["vision_embeds"] = _sds(
+            (B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.enc_dec:
+        out["audio_frames"] = _sds(
+            (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def decode_input_specs(cfg, shape: ShapeCell) -> Dict[str, Any]:
+    """Token + DecodeState stand-ins (cache sized seq_len)."""
+    B, S = shape.global_batch, shape.seq_len
+    state = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, B, S, jnp.bfloat16)
+    )
+    return {"token": _sds((B, 1), jnp.int32), "state": state}
+
+
+def param_specs_abstract(cfg, key=None):
+    """Abstract param tree via eval_shape (no allocation)."""
+    import functools
+
+    k = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        functools.partial(model_lib.init_params, cfg), k
+    )

@@ -1,0 +1,17 @@
+"""LM substrate: model definitions for the 10 assigned architectures."""
+from .config import ModelConfig
+from . import layers, attention, mla, moe, ssm, rwkv, transformer, model
+from .transformer import init_params, forward
+from .model import (
+    DecodeState,
+    init_decode_state,
+    decode_step,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "layers", "attention", "mla", "moe", "ssm", "rwkv", "transformer",
+    "model", "init_params", "forward", "DecodeState", "init_decode_state",
+    "decode_step", "prefill",
+]

@@ -1,0 +1,214 @@
+"""Attention: GQA self-attention (full + chunked flash-style), cross-attn,
+and KV-cache decode. MLA lives in mla.py.
+
+Layouts: activations (B, S, D); q/k/v (B, S, H, dh). KV heads are repeated
+to H before the contraction so the head axis shards uniformly over "model".
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from repro.distributed import sharding as _shard
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, Hkv, dh)
+    v: jnp.ndarray        # (B, S_max, Hkv, dh)
+    index: jnp.ndarray    # scalar int32 — next write position
+
+
+def attn_init(key, cfg, cross: bool = False) -> dict:
+    D, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "wq": layers.dense_init(ks[0], (D, H * dh)),
+        "wk": layers.dense_init(ks[1], (D, Hkv * dh)),
+        "wv": layers.dense_init(ks[2], (D, Hkv * dh)),
+        "wo": layers.dense_init(ks[3], (H * dh, D), scale=out_scale),
+    }
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _repeat_kv(x, q_per_kv):
+    if q_per_kv == 1:
+        return x
+    return jnp.repeat(x, q_per_kv, axis=2)
+
+
+def _full_attn(q, k, v, q_pos, kv_pos, causal, window):
+    """q: (B,Sq,H,dh), k/v: (B,Skv,H,dh). Returns (B,Sq,H,dh)."""
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    mask = jnp.ones(scores.shape[-2:], bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window > 0:
+        mask &= q_pos[:, None] - kv_pos[None, :] < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _flash_attn(q, k, v, q_pos, kv_pos, causal, window, cq, ckv):
+    """Double-chunked online-softmax attention (prefill / long-context train).
+
+    The memory-hierarchy shape of FlashAttention adapted as a lax.scan
+    schedule: XLA:TPU keeps the (cq, ckv) score panel in VMEM; no (Sq, Skv)
+    intermediate is ever materialized.
+    """
+    B, Sq, H, dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    nq = -(-Sq // cq)
+    nk = -(-Skv // ckv)
+    pq = nq * cq - Sq
+    pk = nk * ckv - Skv
+    q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, (0, pq), constant_values=-1)       # masked out
+    kv_pos = jnp.pad(kv_pos, (0, pk), constant_values=2**30)  # masked out
+
+    qc = q.reshape(B, nq, cq, H, dh).transpose(1, 0, 3, 2, 4)   # (nq,B,H,cq,dh)
+    kc = k.reshape(B, nk, ckv, H, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, ckv, H, dh).transpose(1, 0, 3, 2, 4)
+    qpc = q_pos.reshape(nq, cq)
+    kpc = kv_pos.reshape(nk, ckv)
+
+    def q_step(_, qi):
+        qblk, qp = qi                                           # (B,H,cq,dh)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = ki
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk) * scale
+            s = s.astype(jnp.float32)
+            msk = jnp.ones((cq, ckv), bool)
+            if causal:
+                msk &= qp[:, None] >= kp[None, :]
+            if window > 0:
+                msk &= qp[:, None] - kp[None, :] < window
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, H, cq), -jnp.inf, jnp.float32),
+            jnp.zeros((B, H, cq), jnp.float32),
+            jnp.zeros((B, H, cq, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kc, vc, kpc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(q_step, None, (qc, qpc))              # (nq,B,H,cq,dh)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * cq, H, dh)
+    return out[:, :Sq]
+
+
+def attn_apply(
+    cfg,
+    p: dict,
+    x: jnp.ndarray,                      # (B, S, D)
+    positions: jnp.ndarray,              # (S,)
+    causal: bool = True,
+    kv_source: Optional[jnp.ndarray] = None,   # cross-attention memory
+    use_rope: bool = True,
+) -> jnp.ndarray:
+    """Training / prefill self- or cross-attention (no cache)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_source is None else kv_source
+    q = _split_heads(x @ p["wq"].astype(dt), H, dh)
+    k = _split_heads(src @ p["wk"].astype(dt), Hkv, dh)
+    v = _split_heads(src @ p["wv"].astype(dt), Hkv, dh)
+    kv_pos = positions if kv_source is None else jnp.arange(src.shape[1])
+    if use_rope and kv_source is None:
+        q = layers.apply_rope(q, positions[None], cfg.rope_theta)
+        k = layers.apply_rope(k, kv_pos[None], cfg.rope_theta)
+    k = _repeat_kv(k, cfg.q_per_kv)
+    v = _repeat_kv(v, cfg.q_per_kv)
+    Skv = k.shape[1]
+    if S * Skv > 4 * 1024 * 1024:
+        out = _flash_attn(
+            q, k, v, positions, kv_pos, causal, cfg.sliding_window,
+            cfg.attn_chunk_q, cfg.attn_chunk_kv,
+        )
+    else:
+        out = _full_attn(q, k, v, positions, kv_pos, causal,
+                         cfg.sliding_window)
+    return out.reshape(B, S, H * dh) @ p["wo"].astype(dt)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype) -> KVCache:
+    Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_seq, Hkv, dh), dtype),
+        v=jnp.zeros((batch, max_seq, Hkv, dh), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def attn_decode(
+    cfg,
+    p: dict,
+    x: jnp.ndarray,                     # (B, 1, D)
+    cache: KVCache,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode against a dense KV cache."""
+    dt = x.dtype
+    B, _, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    idx = cache.index
+    q = _split_heads(x @ p["wq"].astype(dt), H, dh)
+    k_new = _split_heads(x @ p["wk"].astype(dt), Hkv, dh)
+    v_new = _split_heads(x @ p["wv"].astype(dt), Hkv, dh)
+    if use_rope:
+        pos = idx[None, None]
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k_new = layers.apply_rope(k_new, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (0, idx, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (0, idx, 0, 0)
+    )
+    kv_pos = jnp.arange(cache.k.shape[1])
+    # Flash-decoding layout (§Perf iteration 2): replicate the tiny q over
+    # "model" and keep the cache (and thus the score panel) sequence-sharded
+    # — without the hint GSPMD re-shards the whole cache to q's head
+    # sharding, all-gathering seq_len*Hkv*dh bytes per layer per step.
+    q = _shard.hint(q, "batch", None, None, None)
+    k = _repeat_kv(k_cache.astype(dt), cfg.q_per_kv)
+    v = _repeat_kv(v_cache.astype(dt), cfg.q_per_kv)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    s = _shard.hint(s, "batch", None, None, "seq")
+    s = s.astype(jnp.float32)
+    valid = kv_pos <= idx
+    if cfg.sliding_window > 0:
+        valid &= idx - kv_pos < cfg.sliding_window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1).astype(dt)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(B, 1, H * dh) @ p["wo"].astype(dt)
+    return out, KVCache(k=k_cache, v=v_cache, index=idx + 1)

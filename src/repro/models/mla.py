@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed-KV attention.
+
+Train/prefill uses the naive (expanded) formulation; decode uses the
+*absorbed* formulation: the up-projections w_uk / w_uv are folded into the
+query / output sides so the cache stays in latent space (kv_lora + rope dims
+per token instead of 2·H·dh) and no per-step expansion of the cache occurs —
+DeepSeek's serving trick, which is what makes the decode roofline
+memory-term small.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from repro.distributed import sharding as _shard
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # (B, S_max, kv_lora)
+    k_rope: jnp.ndarray   # (B, S_max, rope_dims)
+    index: jnp.ndarray
+
+
+def mla_init(key, cfg) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    r, dn, dv = cfg.kv_lora, cfg.qk_nope_dims, cfg.v_head_dim
+    dr = cfg.qk_rope_dims
+    ks = jax.random.split(key, 6)
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "wq": layers.dense_init(ks[0], (D, H * (dn + dr))),
+        "w_dkv": layers.dense_init(ks[1], (D, r)),
+        "w_krope": layers.dense_init(ks[2], (D, dr)),
+        "kv_norm": layers.norm_init(r),
+        "w_uk": layers.dense_init(ks[3], (r, H * dn)),
+        "w_uv": layers.dense_init(ks[4], (r, H * dv)),
+        "wo": layers.dense_init(ks[5], (H * dv, D), scale=out_scale),
+    }
+
+
+def _project_q(cfg, p, x, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dims, cfg.qk_rope_dims
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions[None], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(cfg, p, x, positions, causal: bool = True) -> jnp.ndarray:
+    """Naive (expanded) MLA for train / prefill."""
+    dt = x.dtype
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_dims, cfg.qk_rope_dims, cfg.v_head_dim,
+                     cfg.kv_lora)
+    q_nope, q_rope = _project_q(cfg, p, x, positions)
+    c_kv = layers.rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"],
+                           cfg.norm_eps)
+    k_rope = layers.apply_rope(
+        (x @ p["w_krope"].astype(dt))[:, :, None, :], positions[None],
+        cfg.rope_theta,
+    )                                                     # (B,S,1,dr)
+    k_nope = (c_kv @ p["w_uk"].astype(dt)).reshape(B, S, H, dn)
+    v = (c_kv @ p["w_uv"].astype(dt)).reshape(B, S, H, dv)
+    scale = 1.0 / math.sqrt(dn + dr)
+    s = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope[:, :, 0, :])
+    ) * scale
+    s = s.astype(jnp.float32)
+    if causal:
+        mask = positions[:, None] >= positions[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    probs = jax.nn.softmax(s, -1).astype(dt)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(B, S, H * dv) @ p["wo"].astype(dt)
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_seq, cfg.kv_lora), dtype),
+        k_rope=jnp.zeros((batch, max_seq, cfg.qk_rope_dims), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(cfg, p, x, cache: MLACache) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed-matrix decode: scores and values in latent space."""
+    dt = x.dtype
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_dims, cfg.qk_rope_dims, cfg.v_head_dim,
+                     cfg.kv_lora)
+    idx = cache.index
+    pos = idx[None, None]
+    q_nope, q_rope = _project_q(cfg, p, x, pos[0])
+    c_new = layers.rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"],
+                            cfg.norm_eps)
+    kr_new = layers.apply_rope(
+        (x @ p["w_krope"].astype(dt))[:, :, None, :], pos, cfg.rope_theta
+    )[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, idx, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, idx, 0)
+    )
+    # absorb w_uk into the query:  q_lat[h, r] = q_nope[h, dn] @ w_uk[r, h, dn]
+    w_uk = p["w_uk"].astype(dt).reshape(r, H, dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)    # (B,1,H,r)
+    # flash-decoding layout: q replicated, latent cache stays seq-sharded
+    q_lat = _shard.hint(q_lat, "batch", None, None, None)
+    q_rope = _shard.hint(q_rope, "batch", None, None, None)
+    scale = 1.0 / math.sqrt(dn + dr)
+    s = (
+        jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv.astype(dt))
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope.astype(dt))
+    ) * scale
+    s = _shard.hint(s, "batch", None, None, "seq")
+    s = s.astype(jnp.float32)
+    valid = jnp.arange(c_kv.shape[1]) <= idx
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    probs = jax.nn.softmax(s, -1).astype(dt)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv.astype(dt))  # latent ctx
+    w_uv = p["w_uv"].astype(dt).reshape(r, H, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv)
+    out = out.reshape(B, 1, H * dv) @ p["wo"].astype(dt)
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, index=idx + 1)

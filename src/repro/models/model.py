@@ -1,0 +1,357 @@
+"""Model facade: init / loss / forward / prefill / decode_step.
+
+Decode state is a stacked-per-layer cache pytree driven through lax.scan —
+the same depth-independent compile posture as the training forward.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, attention, mla, moe, ssm, rwkv, transformer
+from .attention import KVCache
+from .transformer import init_params, forward, encode
+
+
+class DecodeState(NamedTuple):
+    layer: Any                 # stacked per-layer cache pytree
+    shared: Any                # (n_sites, ...) KVCache stack (zamba2) or None
+    cross: Any                 # (enc_out, stacked cross-KV) (whisper) or None
+    step: jnp.ndarray          # scalar int32 — tokens decoded so far
+
+
+# ------------------------------------------------------------ cache builders
+def _layer_cache(cfg, batch: int, max_seq: int, dtype):
+    """One layer's decode cache for this config's mixer."""
+    if cfg.mixer == "attn":
+        if cfg.mla:
+            return mla.init_cache(cfg, batch, max_seq, dtype)
+        return attention.init_cache(cfg, batch, max_seq, dtype)
+    if cfg.mixer == "mamba2":
+        return ssm.init_cache(cfg, batch, dtype)
+    if cfg.mixer == "rwkv6":
+        return rwkv.init_cache(cfg, batch, dtype)
+    raise ValueError(cfg.mixer)
+
+
+def _stack(n, tree):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree
+    )
+
+
+def init_decode_state(cfg, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    layer = _stack(cfg.n_layers, _layer_cache(cfg, batch, max_seq, dtype))
+    shared = None
+    if cfg.shared_attn_every > 0:
+        shared = _stack(
+            cfg.attn_sites,
+            attention.init_cache(cfg, batch, max_seq, dtype),
+        )
+    cross = None
+    if cfg.enc_dec:
+        dt = jnp.dtype(cfg.compute_dtype)
+        Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+        cross = (
+            jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dt),   # enc_out
+            jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Hkv, dh), dt),  # K
+            jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Hkv, dh), dt),  # V
+        )
+    return DecodeState(layer=layer, shared=shared, cross=cross,
+                       step=jnp.zeros((), jnp.int32))
+
+
+# ----------------------------------------------------------------- decode
+def _mixer_decode(cfg, bp, x, cache):
+    if cfg.mixer == "attn":
+        if cfg.mla:
+            return mla.mla_decode(cfg, bp["mla"], x, cache)
+        return attention.attn_decode(cfg, bp["attn"], x, cache,
+                                     use_rope=cfg.use_rope)
+    if cfg.mixer == "mamba2":
+        return ssm.ssm_decode(cfg, bp["ssm"], x, cache)
+    if cfg.mixer == "rwkv6":
+        return rwkv.tmix_decode(cfg, bp["tmix"], x, cache)
+    raise ValueError(cfg.mixer)
+
+
+def _channel_decode(cfg, bp, x, cache, layer_idx):
+    """Channel mixer during decode; rwkv cmix carries shift state."""
+    if cfg.mlp == "rwkv6_cmix":
+        return rwkv.cmix_decode(cfg, bp["cmix"], x, cache)
+    out, _ = transformer._apply_channel(cfg, bp, x, layer_idx)
+    return out, cache
+
+
+def _cross_decode(cfg, bp, x, k, v):
+    """Cross-attention against precomputed encoder K/V (whisper decode)."""
+    import math
+
+    dt = x.dtype
+    B = x.shape[0]
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = bp["xattn"]
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, H, dh)
+    kk = attention._repeat_kv(k.astype(dt), cfg.q_per_kv)
+    vv = attention._repeat_kv(v.astype(dt), cfg.q_per_kv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / math.sqrt(dh)
+    probs = jax.nn.softmax(s.astype(jnp.float32), -1).astype(dt)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    return out.reshape(B, 1, H * dh) @ p["wo"].astype(dt)
+
+
+def decode_step(cfg, params, token: jnp.ndarray,
+                state: DecodeState) -> Tuple[jnp.ndarray, DecodeState]:
+    """One decode step. token: (B, 1) int32 (or (B, 1, D) embeds for vlm
+    image-free steps are not needed: decode always consumes token ids)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["tok"].astype(dt)[token]            # (B,1,D)
+    if cfg.enc_dec:
+        pos_emb = layers.sinusoidal_positions(cfg.max_seq, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            pos_emb, state.step, 1, axis=0
+        ).astype(dt)[None]
+
+    L = cfg.n_layers
+    flags = None
+    site_idx = None
+    if cfg.shared_attn_every > 0:
+        idxs = jnp.arange(L)
+        flags = (idxs % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+        site_idx = jnp.cumsum(flags) - 1                    # (L,)
+
+    dense_mlp = params.get("dense_mlp")
+    cross = state.cross
+
+    def body(carry, inp):
+        x, shared_caches = carry
+        if flags is not None:
+            bp, cache_l, li, flag, site = inp
+        else:
+            bp, cache_l, li = inp
+        if dense_mlp is not None:
+            bp = dict(bp, dense_mlp=dense_mlp)
+        h = layers.apply_norm(cfg, x, bp["norm1"])
+        h, cache_mix = _mixer_decode(cfg, bp, h, _mix_cache(cfg, cache_l))
+        x = x + h
+        if flags is not None:
+            scfg = cfg.replace(mixer="attn")
+
+            def with_attn(op):
+                x, sc = op
+                cache_s = jax.tree.map(lambda a: a[site], sc)
+                # all sites share the same write index = step
+                cache_s = cache_s._replace(index=state.step)
+                h2, cache_s = attention.attn_decode(
+                    scfg, params["shared_attn"],
+                    layers.apply_norm(cfg, x, params["shared_norm"]),
+                    cache_s, use_rope=cfg.use_rope,
+                )
+                sc = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new, site, 0
+                    ),
+                    sc, cache_s,
+                )
+                return x + h2, sc
+
+            x, shared_caches = jax.lax.cond(
+                flag, with_attn, lambda op: op, (x, shared_caches)
+            )
+        if cross is not None:
+            enc_out, ck, cv = cross
+            x = x + _cross_decode(
+                cfg, bp, layers.apply_norm(cfg, x, bp["norm_x"]),
+                ck[li], cv[li],
+            )
+        h = layers.apply_norm(cfg, x, bp["norm2"])
+        h, cache_ch = _channel_decode(
+            cfg, bp, h, _mix_cache(cfg, cache_l), li
+        )
+        x = x + h
+        new_cache = _merge_cache(cfg, cache_l, cache_mix, cache_ch)
+        return (x, shared_caches), new_cache
+
+    if not cfg.scan_layers:
+        carry = (x, state.shared)
+        new_layer = []
+        for i in range(L):
+            inp = [jax.tree.map(lambda a: a[i], params["blocks"]),
+                   jax.tree.map(lambda a: a[i], state.layer),
+                   jnp.asarray(i)]
+            if flags is not None:
+                inp += [flags[i], site_idx[i]]
+            carry, nc = body(carry, tuple(inp))
+            new_layer.append(nc)
+        x, shared_new = carry
+        layer_new = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layer)
+    else:
+        xs = [params["blocks"], state.layer, jnp.arange(L)]
+        if flags is not None:
+            xs += [flags, site_idx]
+        (x, shared_new), layer_new = jax.lax.scan(
+            body, (x, state.shared), tuple(xs)
+        )
+    x = layers.apply_norm(cfg, x, params["final_norm"])
+    logits = layers.logits_from_hidden(cfg, params, x)
+    return logits, DecodeState(
+        layer=layer_new, shared=shared_new, cross=state.cross,
+        step=state.step + 1,
+    )
+
+
+def _mix_cache(cfg, cache_l):
+    """Cache handed to the mixer/channel: rwkv shares one cache struct."""
+    return cache_l
+
+
+def _merge_cache(cfg, old, after_mix, after_channel):
+    """rwkv: tmix updates (shift_tmix, wkv), cmix updates shift_cmix."""
+    if cfg.mixer == "rwkv6":
+        return after_mix._replace(shift_cmix=after_channel.shift_cmix)
+    return after_mix
+
+
+# ----------------------------------------------------------------- prefill
+def prefill(cfg, params, tokens, max_seq: int,
+            vision_embeds=None, audio_frames=None
+            ) -> Tuple[jnp.ndarray, DecodeState]:
+    """Run the full prompt, returning last-position logits + decode state.
+
+    Attention caches are filled with the prompt's K/V; recurrent mixers keep
+    their end-of-prompt state. (Serving engines call this once per request.)
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    x = params["embed"]["tok"].astype(dt)[tokens]
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(dt), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    state = init_decode_state(cfg, B, max_seq, dt)
+    enc_out = None
+    cross = None
+    if cfg.enc_dec:
+        enc_out = encode(cfg, params, audio_frames)
+        x = x + layers.sinusoidal_positions(S, cfg.d_model).astype(dt)[None]
+        # precompute cross K/V per layer
+        Hkv, dh = cfg.n_kv_heads, cfg.head_dim
+
+        def xkv(bp):
+            k = (enc_out @ bp["xattn"]["wk"].astype(dt)).reshape(
+                B, cfg.enc_seq, Hkv, dh)
+            v = (enc_out @ bp["xattn"]["wv"].astype(dt)).reshape(
+                B, cfg.enc_seq, Hkv, dh)
+            return k, v
+
+        ck, cv = jax.vmap(xkv)(params["blocks"])
+        cross = (enc_out, ck, cv)
+
+    L = cfg.n_layers
+    flags = None
+    if cfg.shared_attn_every > 0:
+        idxs = jnp.arange(L)
+        flags = (idxs % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+        site_idx = jnp.cumsum(flags) - 1
+
+    def fill_attn(p_attn, x_norm, cache):
+        """Compute prompt K/V, write into cache[:, :S]."""
+        k = (x_norm @ p_attn["wk"].astype(dt)).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = (x_norm @ p_attn["wv"].astype(dt)).reshape(
+            B, S, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.use_rope:
+            k = layers.apply_rope(k, positions[None], cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+        return cache._replace(k=kc, v=vc, index=jnp.asarray(S, jnp.int32))
+
+    def body(carry, inp):
+        x, shared_caches = carry
+        if flags is not None:
+            bp, cache_l, li, flag, site = inp
+        else:
+            bp, cache_l, li = inp
+        if "dense_mlp" in params:
+            bp = dict(bp, dense_mlp=params["dense_mlp"])
+        h_in = layers.apply_norm(cfg, x, bp["norm1"])
+        if cfg.mixer == "attn":
+            if cfg.mla:
+                h = mla.mla_apply(cfg, bp["mla"], h_in, positions)
+                c_kv = layers.rms_norm(
+                    h_in @ bp["mla"]["w_dkv"].astype(dt),
+                    bp["mla"]["kv_norm"], cfg.norm_eps)
+                k_rope = layers.apply_rope(
+                    (h_in @ bp["mla"]["w_krope"].astype(dt))[:, :, None],
+                    positions[None], cfg.rope_theta)[:, :, 0]
+                new_cache = cache_l._replace(
+                    c_kv=jax.lax.dynamic_update_slice(
+                        cache_l.c_kv, c_kv.astype(cache_l.c_kv.dtype),
+                        (0, 0, 0)),
+                    k_rope=jax.lax.dynamic_update_slice(
+                        cache_l.k_rope, k_rope.astype(
+                            cache_l.k_rope.dtype), (0, 0, 0)),
+                    index=jnp.asarray(S, jnp.int32),
+                )
+            else:
+                h = attention.attn_apply(cfg, bp["attn"], h_in, positions,
+                                         use_rope=cfg.use_rope)
+                new_cache = fill_attn(bp["attn"], h_in, cache_l)
+        elif cfg.mixer == "mamba2":
+            h, new_cache = ssm.ssm_apply(cfg, bp["ssm"], h_in,
+                                         return_cache=True)
+        elif cfg.mixer == "rwkv6":
+            h, wkv_state = rwkv.tmix_apply(cfg, bp["tmix"], h_in,
+                                           return_state=True)
+            new_cache = cache_l._replace(
+                shift_tmix=h_in[:, -1].astype(cache_l.shift_tmix.dtype),
+                wkv=wkv_state, index=jnp.asarray(S, jnp.int32))
+        x = x + h
+        if flags is not None:
+            scfg = cfg.replace(mixer="attn")
+
+            def with_attn(op):
+                x, sc = op
+                xn = layers.apply_norm(cfg, x, params["shared_norm"])
+                h2 = attention.attn_apply(
+                    scfg, params["shared_attn"], xn, positions,
+                    use_rope=cfg.use_rope)
+                cache_s = jax.tree.map(lambda a: a[site], sc)
+                cache_s = fill_attn(params["shared_attn"], xn, cache_s)
+                sc = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new, site, 0),
+                    sc, cache_s)
+                return x + h2, sc
+
+            x, shared_caches = jax.lax.cond(
+                flag, with_attn, lambda op: op, (x, shared_caches))
+        if cross is not None:
+            x = x + attention.attn_apply(
+                cfg, bp["xattn"], layers.apply_norm(cfg, x, bp["norm_x"]),
+                positions, causal=False, kv_source=enc_out, use_rope=False)
+        h_in2 = layers.apply_norm(cfg, x, bp["norm2"])
+        if cfg.mlp == "rwkv6_cmix":
+            h2 = rwkv.cmix_apply(cfg, bp["cmix"], h_in2)
+            new_cache = new_cache._replace(
+                shift_cmix=h_in2[:, -1].astype(new_cache.shift_cmix.dtype))
+        else:
+            h2, _ = transformer._apply_channel(cfg, bp, h_in2, li)
+        return (x + h2, shared_caches), new_cache
+
+    xs = [params["blocks"], state.layer, jnp.arange(L)]
+    if flags is not None:
+        xs += [flags, site_idx]
+    (x, shared_new), layer_new = jax.lax.scan(
+        body, (x, state.shared), tuple(xs))
+    x = layers.apply_norm(cfg, x, params["final_norm"])
+    logits = layers.logits_from_hidden(cfg, params, x[:, -1:])
+    return logits, DecodeState(
+        layer=layer_new, shared=shared_new, cross=cross,
+        step=jnp.asarray(S, jnp.int32),
+    )

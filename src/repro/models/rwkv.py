@@ -1,0 +1,256 @@
+"""RWKV-6 ("Finch") token mixer — data-dependent decay linear attention.
+
+Per head (dh-dim keys/values), per-channel decay w_t ∈ (0,1):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ                 S: (dh_k, dh_v)
+    y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+
+Chunk-parallel formulation: the intra-chunk pairwise decay exponent
+``cw_{t-1} - cw_i ≤ 0`` is materialized per (T, T, channel) tile — exact and
+overflow-free (a rank-1 factorization is NOT numerically safe with
+data-dependent decays); inter-chunk terms ride a lax.scan-carried state.
+
+Decode is the exact recurrence on a constant-size state — the attn-free
+long_500k story for rwkv6-3b.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+class RWKVCache(NamedTuple):
+    shift_tmix: jnp.ndarray   # (B, D) previous token (time-mix)
+    shift_cmix: jnp.ndarray   # (B, D) previous token (channel-mix)
+    wkv: jnp.ndarray          # (B, H, dh, dh) state
+    index: jnp.ndarray
+
+
+def _dims(cfg):
+    D = cfg.d_model
+    dh = 64
+    H = D // dh
+    return D, H, dh
+
+
+def tmix_init(key, cfg) -> dict:
+    D, H, dh = _dims(cfg)
+    ks = jax.random.split(key, 16)
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "mu_base": jnp.full((D,), 0.5, jnp.float32),
+        "wo": layers.dense_init(ks[5], (D, D), scale=out_scale),
+        "u": jnp.zeros((H, dh), jnp.float32),
+        "w0": jnp.full((D,), -1.5, jnp.float32),
+        "w_A": layers.dense_init(ks[6], (D, LORA_DECAY), scale=0.1),
+        "w_B": layers.dense_init(ks[7], (LORA_DECAY, D), scale=0.1),
+        "ln_w": layers.norm_init(D),
+    }
+    for i, c in enumerate(("r", "k", "v", "g")):
+        p[f"w{c}"] = layers.dense_init(ks[i], (D, D))
+        p[f"mu_{c}"] = jnp.full((D,), 0.5, jnp.float32)
+        p[f"mix_A_{c}"] = layers.dense_init(ks[8 + i], (D, LORA_MIX),
+                                            scale=0.1)
+        p[f"mix_B_{c}"] = layers.dense_init(ks[12 + i], (LORA_MIX, D),
+                                            scale=0.1)
+    return p
+
+
+def cmix_init(key, cfg) -> dict:
+    D = cfg.d_model
+    F = cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "wk": layers.dense_init(ks[0], (D, F)),
+        "wv": layers.dense_init(ks[1], (F, D), scale=out_scale),
+        "wr": layers.dense_init(ks[2], (D, D)),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of previous segment."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, c, x, xprev):
+    """RWKV6 data-dependent lerp for channel c."""
+    dt = x.dtype
+    base = x + (xprev - x) * p["mu_base"].astype(dt)
+    mix = p[f"mu_{c}"].astype(dt) + jnp.tanh(
+        base @ p[f"mix_A_{c}"].astype(dt)
+    ) @ p[f"mix_B_{c}"].astype(dt)
+    return x + (xprev - x) * mix
+
+
+def _decay_log(p, x, xprev):
+    """Per-channel log-decay  lw = -exp(w0 + lora(x))  (negative)."""
+    dt = x.dtype
+    base = x + (xprev - x) * p["mu_base"].astype(dt)
+    wr = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(base @ p["w_A"].astype(dt)) @ p["w_B"].astype(dt)
+    ).astype(jnp.float32)
+    return -jnp.exp(wr)                                   # (B,S,D)
+
+
+def _group_norm_heads(y, weight, H, eps=64e-5):
+    """Per-head layernorm of (B,S,H,dh) flattened output (RWKV ln_x)."""
+    B, S, _, dh = y.shape
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    out = (y32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out.reshape(B, S, H * dh) * (1.0 + weight.astype(jnp.float32))
+    return out
+
+
+def tmix_apply(cfg, p, x, shift_prev=None, return_state: bool = False):
+    """Time-mix over a full sequence (training / prefill)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    _, H, dh = _dims(cfg)
+    T = cfg.rwkv_chunk
+    while S % T:
+        T //= 2
+    if shift_prev is None:
+        shift_prev = jnp.zeros((B, D), dt)
+    xprev = _token_shift(x, shift_prev)
+
+    r = _ddlerp(p, "r", x, xprev) @ p["wr"].astype(dt)
+    k = _ddlerp(p, "k", x, xprev) @ p["wk"].astype(dt)
+    v = _ddlerp(p, "v", x, xprev) @ p["wv"].astype(dt)
+    g = jax.nn.silu(_ddlerp(p, "g", x, xprev) @ p["wg"].astype(dt))
+    lw = _decay_log(p, x, xprev)                          # (B,S,D) fp32
+
+    def heads(a):
+        return a.reshape(B, S, H, dh)
+
+    r, k, v = heads(r), heads(k), heads(v)
+    lw = lw.reshape(B, S, H, dh)
+
+    nc = S // T
+    rc = r.reshape(B, nc, T, H, dh)
+    kc = k.reshape(B, nc, T, H, dh)
+    vc = v.reshape(B, nc, T, H, dh)
+    lwc = lw.reshape(B, nc, T, H, dh)
+    cw = jnp.cumsum(lwc, axis=2)                          # inclusive
+    u = p["u"].astype(jnp.float32)
+
+    mask_strict = jnp.tril(jnp.ones((T, T), bool), k=-1)
+
+    def chunk(state, inp):
+        rq, kq, vq, cwq, lwq = inp                        # (B,T,H,dh)
+        cw_last = cwq[:, -1]                              # (B,H,dh)
+        ecw = cwq - lwq                                   # exclusive cumsum
+        # intra-chunk: A[t,i] = Σ_c r_t[c] k_i[c] exp(cw_{t-1,c} - cw_{i,c})
+        # for i < t. The pairwise exponent is always <= 0 (cw is decreasing),
+        # so the (T, T, dh) exponent tensor is materialized per head — exact
+        # and overflow-free. (A low-rank factorization exp(a-b)=exp(a)exp(-b)
+        # is NOT safe here: data-dependent decays make exp(-cw_i) unbounded.)
+        diff = ecw[:, :, None] - cwq[:, None, :, :]       # (B,T,T,H,dh)
+        att = jnp.einsum(
+            "bthc,bihc,btihc->bhti",
+            rq.astype(jnp.float32),
+            kq.astype(jnp.float32),
+            jnp.exp(jnp.minimum(diff, 0.0)),
+        )
+        att = jnp.where(mask_strict[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhti,bihd->bthd", att, vq.astype(jnp.float32))
+        # diagonal u-bonus
+        diag = jnp.einsum(
+            "bthc,hc,bthc->bth", rq.astype(jnp.float32), u,
+            kq.astype(jnp.float32),
+        )
+        y_u = diag[..., None] * vq.astype(jnp.float32)
+        # inter: y_t += (r_t ⊙ exp(ecw_t)) @ S_prev   (ecw <= 0: safe)
+        r_inter = rq.astype(jnp.float32) * jnp.exp(ecw)
+        y_inter = jnp.einsum("bthc,bhcd->bthd", r_inter, state)
+        # state update:  S' = exp(cw_last) S + Σ_i k_i exp(cw_last - cw_i) v_i
+        # (cw_last - cw_i <= 0: safe)
+        k_upd = kq.astype(jnp.float32) * jnp.exp(cw_last[:, None] - cwq)
+        s_new = jnp.exp(cw_last)[..., None] * state + jnp.einsum(
+            "bthc,bthd->bhcd", k_upd, vq.astype(jnp.float32)
+        )
+        return s_new, y_intra + y_u + y_inter
+
+    state0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    scan_in = tuple(
+        jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, cw, lwc)
+    )
+    s_final, yc = jax.lax.scan(chunk, state0, scan_in)    # (nc,B,T,H,dh)
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, dh)
+    y = _group_norm_heads(y, p["ln_w"], H).astype(dt)
+    out = (y * g) @ p["wo"].astype(dt)
+    if return_state:
+        return out, s_final
+    return out
+
+
+def cmix_apply(cfg, p, x, shift_prev=None) -> jnp.ndarray:
+    dt = x.dtype
+    B, S, D = x.shape
+    if shift_prev is None:
+        shift_prev = jnp.zeros((B, D), dt)
+    xprev = _token_shift(x, shift_prev)
+    xk = x + (xprev - x) * p["mu_k"].astype(dt)
+    xr = x + (xprev - x) * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (
+        kk @ p["wv"].astype(dt)
+    )
+
+
+# --------------------------------------------------------------- decode
+def init_cache(cfg, batch: int, dtype) -> RWKVCache:
+    D, H, dh = _dims(cfg)
+    return RWKVCache(
+        shift_tmix=jnp.zeros((batch, D), dtype),
+        shift_cmix=jnp.zeros((batch, D), dtype),
+        wkv=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def tmix_decode(cfg, p, x, cache: RWKVCache) -> Tuple[jnp.ndarray, RWKVCache]:
+    """x: (B, 1, D) single-token time-mix."""
+    dt = x.dtype
+    B, _, D = x.shape
+    _, H, dh = _dims(cfg)
+    xprev = cache.shift_tmix[:, None].astype(dt)
+    r = _ddlerp(p, "r", x, xprev) @ p["wr"].astype(dt)
+    k = _ddlerp(p, "k", x, xprev) @ p["wk"].astype(dt)
+    v = _ddlerp(p, "v", x, xprev) @ p["wv"].astype(dt)
+    g = jax.nn.silu(_ddlerp(p, "g", x, xprev) @ p["wg"].astype(dt))
+    lw = _decay_log(p, x, xprev)[:, 0].reshape(B, H, dh)
+    r = r.reshape(B, H, dh).astype(jnp.float32)
+    k = k.reshape(B, H, dh).astype(jnp.float32)
+    v = v.reshape(B, H, dh).astype(jnp.float32)
+    u = p["u"].astype(jnp.float32)
+    s = cache.wkv
+    y = jnp.einsum("bhc,bhcd->bhd", r, s) + jnp.einsum(
+        "bhc,hc,bhc,bhd->bhd", r, u, k, v
+    )
+    s_new = jnp.exp(lw)[..., None] * s + jnp.einsum("bhc,bhd->bhcd", k, v)
+    y = _group_norm_heads(y[:, None], p["ln_w"], H).astype(dt)
+    out = (y * g) @ p["wo"].astype(dt)
+    return out, cache._replace(
+        shift_tmix=x[:, 0].astype(cache.shift_tmix.dtype),
+        wkv=s_new,
+        index=cache.index + 1,
+    )
+
+
+def cmix_decode(cfg, p, x, cache: RWKVCache) -> Tuple[jnp.ndarray, RWKVCache]:
+    out = cmix_apply(cfg, p, x, shift_prev=cache.shift_cmix.astype(x.dtype))
+    return out, cache._replace(shift_cmix=x[:, 0].astype(
+        cache.shift_cmix.dtype))

