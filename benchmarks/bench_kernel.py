@@ -9,26 +9,13 @@ that justify the default_tile choice in kernels/ops.py).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
-import jax
 import numpy as np
 
 from repro.core import Domain, pb, clustered_events, bucketing
 from repro.kernels import stkde_tiled, default_tile
-
-
-def _time(fn, reps=3):
-    out = fn()
-    jax.block_until_ready(out)
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return min(ts)
+from repro.obs import timeit
 
 
 def tile_gemm_stats(dom: Domain, tile, cap: int) -> Dict:
@@ -54,8 +41,9 @@ def run(quick=False) -> List[Dict]:
                  hs=4.0, ht=2.0)
     pts = clustered_events(3000 if quick else 10_000, dom, seed=0)
     rows = []
-    t_scatter = _time(lambda: pb(pts, dom))
-    t_tiled_ref = _time(lambda: stkde_tiled(pts, dom, use_ref=True))
+    t_scatter = timeit(lambda: pb(pts, dom), name="kernel.scatter_pb").best
+    t_tiled_ref = timeit(lambda: stkde_tiled(pts, dom, use_ref=True),
+                         name="kernel.tiled_dense").best
     rows.append({
         "bench": "scatter_vs_tiled(cpu)",
         "scatter_pb_s": round(t_scatter, 4),

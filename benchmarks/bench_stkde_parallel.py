@@ -22,38 +22,36 @@ import numpy as np
 
 from repro.core import bench_suite, bucketing, coloring
 from repro.distributed import partition
+from repro.obs import metrics as obs_metrics, trace as obs_trace
 
 SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 
+# All subprocess timing goes through repro.obs.timeit (one warmup +
+# block_until_ready code path); spans and metrics are exported through the
+# RESULT json and merged into the parent's tracer/registry.
 _SUBPROC = r"""
-import json, time
-import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-from repro.core import Domain, pb, bench_suite
+import json
+import repro.compat
+import numpy as np, jax
+from repro.core import pb, bench_suite
 from repro.distributed.stkde_dist import STRATEGIES
+from repro.obs import metrics, timeit, trace
 
 suite = bench_suite(max_voxels=500_000, max_points=8_000)
 inst = suite[{name!r}]
 dom = inst.domain()
 pts = inst.points()
 
-def timeit(fn, reps=3):
-    out = fn(); jax.block_until_ready(out)
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter(); out = fn(); jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return min(ts)
-
-seq = timeit(lambda: pb(pts, dom))
+seq = timeit(lambda: pb(pts, dom), name="parallel.seq_pb_sym",
+             instance={name!r}).best
 rows = {{"instance": {name!r}, "seq_pb_sym_s": seq}}
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,)*2)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 want = np.asarray(pb(pts, dom))
 for strat in ("dr", "dd", "pd", "dd_lpt"):
     fn = STRATEGIES[strat]
     try:
-        t = timeit(lambda: fn(pts, dom, mesh))
+        t = timeit(lambda: fn(pts, dom, mesh), name="parallel." + strat,
+                   instance={name!r}).best
         got = np.asarray(fn(pts, dom, mesh))
         ok = bool(np.abs(got - want).max() < 1e-5)
         rows[strat + "_s"] = t
@@ -62,11 +60,35 @@ for strat in ("dr", "dd", "pd", "dd_lpt"):
     except ValueError as e:
         rows[strat + "_s"] = None
         rows[strat + "_note"] = str(e)[:60]
+rows["_trace_events"] = trace.get_tracer().export_events()
+rows["_metrics"] = metrics.export()
 print("RESULT" + json.dumps(rows))
 """
 
+_RECONCILE_SUBPROC = r"""
+import json
+import repro.compat
+import jax
+from repro.core import bench_suite
+from repro.obs import metrics, reconcile, trace
+
+suite = bench_suite(max_voxels=500_000, max_points=8_000)
+inst = suite[{name!r}]
+dom = inst.domain()
+pts = inst.points()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+out = reconcile.run(pts, dom, mesh, reps={reps})
+out["instance"] = {name!r}
+out["_trace_events"] = trace.get_tracer().export_events()
+out["_metrics"] = metrics.export()
+print("RESULT" + json.dumps(out))
+"""
+
+_sub_pid = 0   # synthetic pid per subprocess for the merged Chrome trace
+
 
 def _run_sub(code: str, n_dev: int = 8) -> dict:
+    global _sub_pid
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
     env["JAX_PLATFORMS"] = "cpu"
@@ -77,8 +99,28 @@ def _run_sub(code: str, n_dev: int = 8) -> dict:
         raise RuntimeError(proc.stderr[-2000:])
     for line in proc.stdout.splitlines():
         if line.startswith("RESULT"):
-            return json.loads(line[len("RESULT"):])
+            r = json.loads(line[len("RESULT"):])
+            _sub_pid += 1
+            events = r.pop("_trace_events", None)
+            if events:
+                obs_trace.get_tracer().ingest(events, pid=_sub_pid)
+            exported = r.pop("_metrics", None)
+            if exported:
+                obs_metrics.get_registry().merge(exported)
+            return r
     raise RuntimeError("no RESULT line:\n" + proc.stdout[-2000:])
+
+
+def run_reconcile(instance="Flu_Mr-Hb", quick=False) -> List[Dict]:
+    """Planner predicted-vs-measured phase reconciliation (8-device mesh).
+
+    Runs in the same 8-fake-device subprocess as the speedup benchmarks;
+    needs a PD-feasible instance on the 4x2 mesh (subdomain >= Hs).
+    """
+    r = _run_sub(_RECONCILE_SUBPROC.format(
+        name=instance, reps=2 if quick else 3))
+    print(r["report"])
+    return [r]
 
 
 def run_speedups(instances=("Dengue_Lr-Hb", "PollenUS_Lr-Lb", "Flu_Mr-Hb"),

@@ -9,7 +9,6 @@ paper's claims to check: PB ≫ VB (orders of magnitude), PB-SYM speedup
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
@@ -19,6 +18,7 @@ import numpy as np
 from repro.core import Domain, vb, vb_dec, pb, bench_suite
 from repro.core.pb import pb_eval_only, _pb_eval_impl
 from repro.core import kernels_math as km
+from repro.obs import timeit
 
 
 def _eval_flops(pts_shape, dom, variant) -> float:
@@ -27,7 +27,10 @@ def _eval_flops(pts_shape, dom, variant) -> float:
     f = jax.jit(lambda p: _pb_eval_impl(
         p, dom, variant, km.DEFAULT_KS, km.DEFAULT_KT, 1 << 22))
     co = f.lower(jax.ShapeDtypeStruct(pts_shape, jnp.float32)).compile()
-    return float((co.cost_analysis() or {}).get("flops", 0.0))
+    ca = co.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # older jax: one dict per device
+        ca = ca[0] if ca else {}
+    return float(ca.get("flops", 0.0))
 
 # instances small enough that VB itself is measurable on CPU
 VB_INSTANCES = ["Dengue_Lr-Lb", "Dengue_Lr-Hb", "PollenUS_Lr-Lb",
@@ -39,16 +42,8 @@ PB_INSTANCES = VB_INSTANCES + [
 ]
 
 
-def _time(fn, *args, reps=3, **kw) -> float:
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return min(ts)
+def _time(fn, *args, reps=3, name=None, **kw) -> float:
+    return timeit(lambda: fn(*args, **kw), reps=reps, name=name).best
 
 
 def run(max_voxels=400_000, max_points=6_000, quick=False) -> List[Dict]:
@@ -64,19 +59,23 @@ def run(max_voxels=400_000, max_points=6_000, quick=False) -> List[Dict]:
                "Hs": dom.Hs, "Ht": dom.Ht}
         jpts = jnp.asarray(pts)
         if name in VB_INSTANCES and not quick:
-            row["vb_s"] = round(_time(vb, jpts, dom, reps=1), 4)
-            row["vb_dec_s"] = round(_time(vb_dec, pts, dom, reps=1), 4)
+            row["vb_s"] = round(
+                _time(vb, jpts, dom, reps=1, name="table3.vb"), 4)
+            row["vb_dec_s"] = round(
+                _time(vb_dec, pts, dom, reps=1, name="table3.vb_dec"), 4)
         for variant, col in (("pb", "pb_s"), ("disk", "pb_disk_s"),
                              ("bar", "pb_bar_s"), ("sym", "pb_sym_s")):
             row[col] = round(
-                _time(lambda: pb(pts, dom, variant=variant)), 4
+                _time(lambda: pb(pts, dom, variant=variant),
+                      name=f"table3.{col[:-2]}"), 4
             )
             # compute phase only (paper Fig. 7 phase split: on vectorized
             # XLA the scatter/accumulate phase is variant-independent and
             # dominates on CPU; Table 3's algorithmic story lives in the
             # kernel-evaluation phase)
             row[col[:-2] + "_eval_s"] = round(
-                _time(lambda: pb_eval_only(pts, dom, variant=variant)), 4
+                _time(lambda: pb_eval_only(pts, dom, variant=variant),
+                      name=f"table3.{col[:-2]}_eval"), 4
             )
         row["sym_speedup"] = round(row["pb_s"] / max(row["pb_sym_s"], 1e-9),
                                    3)

@@ -101,6 +101,25 @@ def suggest_lever(r: dict) -> str:
     return "increase per-chip batch or sequence to amortize"
 
 
+def reconcile_table(results: List[dict]) -> str:
+    """Markdown table of planner predicted-vs-measured phase times
+    (results/bench/reconcile.json, written by ``run.py --trace``)."""
+    lines = [
+        "| instance | strategy | term | predicted s | measured s | "
+        "rel err |",
+        "|---|---|---|---|---|---|",
+    ]
+    for res in results:
+        inst = res.get("instance", "?")
+        for r in res.get("rows", []):
+            lines.append(
+                f"| {inst} | {r['strategy']} | {r['term']} | "
+                f"{r['predicted_s']:.3e} | {r['measured_s']:.3e} | "
+                f"{r['rel_err']:+.1%} |"
+            )
+    return "\n".join(lines)
+
+
 def summarize(rows):
     ok = sum(1 for r in rows if r.get("ok") and not r.get("skipped"))
     skip = sum(1 for r in rows if r.get("skipped"))
@@ -124,6 +143,17 @@ def main():
     print(roofline_table(lm))
     print("\n### Roofline — STKDE production-scale cells\n")
     print(roofline_table(st))
+    rec = "results/bench/reconcile.json"
+    if os.path.exists(rec):
+        with open(rec) as f:
+            results = json.load(f)
+        mesh_s = results[0].get("mesh", "?") if results else "?"
+        print(f"\n### Planner reconciliation — predicted vs measured "
+              f"(host mesh {mesh_s})\n")
+        print(reconcile_table(results))
+        print("\nLarge compute rel-err on host CPU is expected: the "
+              "planner models TPU FLOPs/bandwidth, not XLA:CPU dispatch "
+              "overhead; calibrate `plan.HOST` from these rows.")
 
 
 if __name__ == "__main__":

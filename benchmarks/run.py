@@ -12,6 +12,11 @@ Sections:
 
 Output: ``name,us_per_call,derived`` CSV lines to stdout + JSON to
 results/bench/.
+
+With ``--trace``, also writes results/bench/trace.json (Chrome trace —
+load in chrome://tracing or Perfetto) and metrics.json, and the parallel
+section additionally runs the planner predicted-vs-measured phase
+reconciliation (-> reconcile.json + a printed report).
 """
 import argparse
 import json
@@ -29,6 +34,8 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=list(SECTIONS),
                     choices=SECTIONS)
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--trace", action="store_true",
+                    help="export Chrome trace + metrics + reconciliation")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     all_results = {}
@@ -42,6 +49,13 @@ def main() -> None:
         from benchmarks import bench_stkde_parallel
         all_results["parallel"] = bench_stkde_parallel.run_speedups(
             quick=args.quick)
+        if args.trace:
+            print("== parallel: planner reconciliation (8 devices) ==")
+            all_results["reconcile"] = bench_stkde_parallel.run_reconcile(
+                quick=args.quick)
+            with open(os.path.join(args.out, "reconcile.json"), "w") as f:
+                json.dump(all_results["reconcile"], f, indent=1,
+                          default=float)
     if "ddover" in args.only:
         print("== ddover: DD replication overhead (Fig 9) ==")
         from benchmarks import bench_stkde_parallel
@@ -64,6 +78,15 @@ def main() -> None:
 
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(all_results, f, indent=1, default=float)
+
+    if args.trace:
+        from repro.obs import metrics as obs_metrics, trace as obs_trace
+        tpath = os.path.join(args.out, "trace.json")
+        obs_trace.save_chrome_trace(tpath)
+        obs_metrics.save_json(os.path.join(args.out, "metrics.json"))
+        n_ev = len(obs_trace.get_tracer().to_chrome_trace()["traceEvents"])
+        print(f"\n[obs] {n_ev} events -> {tpath} (chrome://tracing), "
+              f"metrics -> {args.out}/metrics.json")
 
     # required CSV summary: name,us_per_call,derived
     print("\nname,us_per_call,derived")

@@ -6,3 +6,5 @@ strategies) for multi-pod TPU meshes, embedded in a full training/serving
 substrate (see DESIGN.md).
 """
 __version__ = "1.0.0"
+
+from . import compat  # noqa: E402,F401  (installs JAX version shims)

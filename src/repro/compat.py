@@ -1,0 +1,136 @@
+"""Version shims for the installed JAX.
+
+The codebase is written against the modern JAX surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.lax.pcast``, ``jax.typeof``,
+``make_mesh(..., axis_types=...)``). Older releases (e.g. 0.4.x, where
+shard_map still lives in ``jax.experimental``) lack several of those names;
+this module resolves each one once, preferring the modern spelling, and
+backfills the handful that tests and benchmark subprocesses import straight
+from ``jax.*`` so one source tree runs on both.
+
+Import side effects are limited to adding missing attributes on ``jax`` /
+``jax.sharding`` — nothing that exists is ever overwritten.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+from typing import Any, FrozenSet
+
+import jax
+
+
+# ----------------------------------------------------------------- shard_map
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # JAX <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SM_PARAMS = set(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f=None, **kw):
+    """``jax.shard_map`` resolved across versions.
+
+    Translates the modern ``check_vma=`` kwarg to the legacy ``check_rep=``
+    when the installed shard_map predates the rename, and drops kwargs the
+    installed version does not know about.
+    """
+    if "check_vma" in kw and "check_vma" not in _SM_PARAMS:
+        kw["check_rep"] = kw.pop("check_vma")
+    kw = {k: v for k, v in kw.items() if k in _SM_PARAMS}
+    if f is None:
+        return functools.partial(_shard_map_impl, **kw)
+    return _shard_map_impl(f, **kw)
+
+
+# ------------------------------------------------------------------- pcast
+def pcast(x, axes, to: str = "varying"):
+    """``jax.lax.pcast`` where available; identity otherwise.
+
+    Legacy shard_map's replication checker (``check_rep``) tracks
+    replicated-vs-varying without explicit casts, so dropping the cast is
+    semantically a no-op there.
+    """
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is None:
+        return x
+    return fn(x, axes, to=to)
+
+
+def vma_of(x) -> FrozenSet[str]:
+    """The varying-manual-axes set of a traced value (empty pre-``typeof``)."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is None:
+        return frozenset()
+    return getattr(typeof(x), "vma", frozenset())
+
+
+if not hasattr(jax, "shard_map"):
+    jax.shard_map = shard_map  # type: ignore[attr-defined]
+
+
+# ------------------------------------------------- optimization_barrier
+@jax.custom_jvp
+def optimization_barrier(x):
+    """``lax.optimization_barrier`` with a differentiation rule.
+
+    Old JAX has no JVP rule for the barrier primitive; the barrier is
+    semantically the identity, so the tangent passes through unchanged.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
+
+
+# ---------------------------------------------------------------- AxisType
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` (all axes were implicitly
+        Auto before explicit-sharding landed)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType  # type: ignore[attr-defined]
+else:
+    AxisType = jax.sharding.AxisType
+
+
+# --------------------------------------------------------------- make_mesh
+_orig_make_mesh = jax.make_mesh
+if "axis_types" not in inspect.signature(_orig_make_mesh).parameters:
+    @functools.wraps(_orig_make_mesh)
+    def _make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+        if axis_types is not None and any(
+            t is not AxisType.Auto for t in axis_types
+        ):
+            raise NotImplementedError(
+                "installed JAX predates explicit/manual mesh axis types"
+            )
+        return _orig_make_mesh(axis_shapes, axis_names, *args, **kw)
+
+    jax.make_mesh = _make_mesh
+
+make_mesh = jax.make_mesh
+
+
+def default_axis_types(n: int) -> tuple:
+    """(AxisType.Auto,) * n — the common mesh construction argument."""
+    return (AxisType.Auto,) * n
+
+
+__all__ = [
+    "shard_map",
+    "pcast",
+    "vma_of",
+    "AxisType",
+    "make_mesh",
+    "default_axis_types",
+]

@@ -25,6 +25,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from .geometry import Domain
 from . import kernels_math as km
 
@@ -162,9 +164,9 @@ def _pb_impl(
     grid = jnp.zeros((gsz + 1,), dtype=jnp.float32)  # +1 slot absorbs drops
     # Inside shard_map the scan carry must carry the same varying-manual-axes
     # tag as the point shards feeding it.
-    vma = getattr(jax.typeof(points), "vma", frozenset())
+    vma = compat.vma_of(points)
     if vma:
-        grid = jax.lax.pcast(grid, tuple(vma), to="varying")
+        grid = compat.pcast(grid, tuple(vma), to="varying")
 
     def body(grid, blk):
         p, v = blk

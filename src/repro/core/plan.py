@@ -38,6 +38,19 @@ class Hardware:
 
 V5E = Hardware()
 
+# Rough single-host CPU constants for reconciliation smoke runs (8 fake XLA
+# host devices share one socket, so per-"device" rates are fractions of the
+# socket). These are calibration starting points, not measurements — the
+# reconcile report exists precisely to expose how far off they are.
+HOST = Hardware(
+    peak_flops=5e10,     # per fake device, fp32 vector path
+    hbm_bw=4e9,          # DRAM bandwidth share per fake device
+    ici_bw=4e9,          # "collective" = memcpy through shared memory
+    hbm_bytes=4e9,
+    vpu_derate=1.0,      # scatter path on CPU is the same ALUs
+    mxu_derate=1.0,
+)
+
 
 def _point_work_flops(dom: Domain, n_eff: float) -> float:
     """PB-SYM flops: disk eval + bar eval + cylinder outer-product FMA."""

@@ -29,12 +29,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map, pcast
 
 from repro.core.geometry import Domain
 from repro.core import bucketing, kernels_math as km
 from repro.core.pb import pb as _pb
+from repro.obs import trace as obs_trace
 from . import partition
 
 PARK = -1e8  # parked coordinate for invalid/padded points
@@ -66,6 +68,19 @@ def _park_invalid(pts, valid):
 
 
 # ------------------------------------------------------------------ DR
+def prepare_dr(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes
+) -> jnp.ndarray:
+    """Pad points to a multiple of the device count (PARK fills)."""
+    pts = np.asarray(points, dtype=np.float32)
+    n = len(pts)
+    Ptot = int(np.prod(_mesh_sizes(mesh, axes)))
+    npad = bucketing.round_up(max(n, Ptot), Ptot)
+    full = np.full((npad, 3), PARK, dtype=np.float32)
+    full[:n] = pts
+    return jnp.asarray(full)
+
+
 def stkde_dr(
     points: np.ndarray,
     dom: Domain,
@@ -75,27 +90,35 @@ def stkde_dr(
     kt: km.TemporalKernel = km.DEFAULT_KT,
 ) -> jnp.ndarray:
     """Domain replication: shard points, replicate grid, all-reduce."""
-    pts = np.asarray(points, dtype=np.float32)
-    n = len(pts)
-    Ptot = int(np.prod(_mesh_sizes(mesh, axes)))
-    npad = bucketing.round_up(max(n, Ptot), Ptot)
-    full = np.full((npad, 3), PARK, dtype=np.float32)
-    full[:n] = pts
-
-    fn = build_dr(dom, mesh, axes, n, ks, kt)
-    return fn(jnp.asarray(full))
+    n = len(points)
+    with obs_trace.span("stkde.dr", n=n, mesh=str(dict(mesh.shape))):
+        with obs_trace.span("stkde.dr.prepare"):
+            full = prepare_dr(points, dom, mesh, axes)
+            fn = build_dr(dom, mesh, axes, n, ks, kt)
+        with obs_trace.span("stkde.dr.execute", blocking=False):
+            return fn(full)
 
 
 def build_dr(dom: Domain, mesh: Mesh, axes, n: int,
-             ks=km.DEFAULT_KS, kt=km.DEFAULT_KT):
-    """Jitted DR computation over pre-sharded points (dry-run lowerable)."""
+             ks=km.DEFAULT_KS, kt=km.DEFAULT_KT, collectives: bool = True):
+    """Jitted DR computation over pre-sharded points (dry-run lowerable).
+
+    ``collectives=False`` compiles the same per-device point work but skips
+    the all-reduce, returning the device-stacked partial grids — the
+    reconciliation probe for the planner's ``comm_s`` term.
+    """
 
     def f(local):  # (npad/P, 3)
         g = _pb(local, dom, variant="sym", ks=ks, kt=kt, n_total=n)
-        return jax.lax.psum(g, axes)
+        if collectives:
+            return jax.lax.psum(g, axes)
+        return g[None]
 
+    out_specs = (
+        P(None, None, None) if collectives else P(axes, None, None, None)
+    )
     return jax.jit(shard_map(
-        f, mesh=mesh, in_specs=P(axes), out_specs=P(None, None, None)
+        f, mesh=mesh, in_specs=P(axes), out_specs=out_specs
     ))
 
 
@@ -117,6 +140,24 @@ def _local_domain(dom: Domain, gx_loc: int, gy_loc: int,
     )
 
 
+def prepare_dd(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes,
+    cap: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Overlap-bucket points onto the (A, B) device grid (DD layout)."""
+    A, B = _mesh_sizes(mesh, axes)
+    pts = np.asarray(points, dtype=np.float32)
+    gx_loc, gy_loc = _device_grid_dims(dom, A, B)
+    b = bucketing.bucket_points_overlap(
+        pts, dom, (gx_loc, gy_loc, dom.Gt), cap=cap
+    )
+    na, nb = b.ntiles[0], b.ntiles[1]
+    bpts, bval = _pad_tile_grid(
+        b.points.reshape(na, nb, b.cap, 3),
+        b.valid.reshape(na, nb, b.cap).astype(np.float32), A, B)
+    return jnp.asarray(bpts), jnp.asarray(bval)
+
+
 def stkde_dd(
     points: np.ndarray,
     dom: Domain,
@@ -127,23 +168,19 @@ def stkde_dd(
     kt: km.TemporalKernel = km.DEFAULT_KT,
 ) -> jnp.ndarray:
     """Domain decomposition: block-sharded grid, overlap-routed points."""
-    ax, ay = axes
     A, B = _mesh_sizes(mesh, axes)
-    pts = np.asarray(points, dtype=np.float32)
-    n = len(pts)
+    n = len(points)
     gx_loc, gy_loc = _device_grid_dims(dom, A, B)
-    b = bucketing.bucket_points_overlap(
-        pts, dom, (gx_loc, gy_loc, dom.Gt), cap=cap
-    )
-    na, nb = b.ntiles[0], b.ntiles[1]
-    bpts, bval = _pad_tile_grid(
-        b.points.reshape(na, nb, b.cap, 3),
-        b.valid.reshape(na, nb, b.cap).astype(np.float32), A, B)
-    fn = build_dd(dom, mesh, axes, n, ks, kt)
-    out = fn(jnp.asarray(bpts), jnp.asarray(bval))
-    out = out.reshape(A, B, gx_loc, gy_loc, dom.Gt)
-    out = out.transpose(0, 2, 1, 3, 4).reshape(A * gx_loc, B * gy_loc, dom.Gt)
-    return out[: dom.Gx, : dom.Gy, :]
+    with obs_trace.span("stkde.dd", n=n, mesh=str(dict(mesh.shape))):
+        with obs_trace.span("stkde.dd.bucket"):
+            bpts, bval = prepare_dd(points, dom, mesh, axes, cap=cap)
+        fn = build_dd(dom, mesh, axes, n, ks, kt)
+        with obs_trace.span("stkde.dd.execute", blocking=False):
+            out = fn(bpts, bval)
+            out = out.reshape(A, B, gx_loc, gy_loc, dom.Gt)
+            out = out.transpose(0, 2, 1, 3, 4).reshape(
+                A * gx_loc, B * gy_loc, dom.Gt)
+            return out[: dom.Gx, : dom.Gy, :]
 
 
 def build_dd(dom: Domain, mesh: Mesh, axes, n: int,
@@ -173,6 +210,24 @@ def build_dd(dom: Domain, mesh: Mesh, axes, n: int,
 
 
 # ------------------------------------------------------------------ PD
+def prepare_pd(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes,
+    cap: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Home-bucket points onto the (A, B) device grid (PD layout)."""
+    A, B = _mesh_sizes(mesh, axes)
+    pts = np.asarray(points, dtype=np.float32)
+    gx_loc, gy_loc = _device_grid_dims(dom, A, B)
+    b = bucketing.bucket_points_home(
+        pts, dom, (gx_loc, gy_loc, dom.Gt), cap=cap
+    )
+    na, nb = b.ntiles[0], b.ntiles[1]
+    bp, bv = _pad_tile_grid(
+        b.points.reshape(na, nb, b.cap, 3),
+        b.valid.reshape(na, nb, b.cap).astype(np.float32), A, B)
+    return jnp.asarray(bp), jnp.asarray(bv)
+
+
 def stkde_pd(
     points: np.ndarray,
     dom: Domain,
@@ -197,38 +252,32 @@ def stkde_pd(
             f" vs Hs={Hs}; use DD/DR or a coarser device grid"
             " (paper §5.1 constraint)"
         )
-    if _pts_override is None:
-        b = bucketing.bucket_points_home(
-            pts, dom, (gx_loc, gy_loc, dom.Gt), cap=cap
-        )
-        na, nb = b.ntiles[0], b.ntiles[1]
-        bp, bv = _pad_tile_grid(
-            b.points.reshape(na, nb, b.cap, 3),
-            b.valid.reshape(na, nb, b.cap).astype(np.float32), A, B)
-        bpts = jnp.asarray(bp)
-        bval = jnp.asarray(bv)
-        in_specs = (P(ax, ay, None, None), P(ax, ay, None))
-        out_specs = P(ax, ay, None, None, None)
-    else:  # hybrid path: (R, A, B, cap, 3) sharded over rep too
-        bpts, bval = _pts_override
-        in_specs = (
-            P(_rep_axis, ax, ay, None, None),
-            P(_rep_axis, ax, ay, None),
-        )
-        out_specs = P(ax, ay, None, None, None)
-    fn = build_pd(dom, mesh, axes, n, ks, kt, rep_axis=_rep_axis)
-    out = fn(bpts, bval)
-    out = out.reshape(A, B, gx_loc, gy_loc, dom.Gt)
-    out = out.transpose(0, 2, 1, 3, 4).reshape(A * gx_loc, B * gy_loc, dom.Gt)
-    return out[: dom.Gx, : dom.Gy, :]
+    strat = "pd" if _rep_axis is None else "hybrid"
+    with obs_trace.span(f"stkde.{strat}", n=n, mesh=str(dict(mesh.shape))):
+        if _pts_override is None:
+            with obs_trace.span(f"stkde.{strat}.bucket"):
+                bpts, bval = prepare_pd(pts, dom, mesh, axes, cap=cap)
+        else:  # hybrid path: (R, A, B, cap, 3) sharded over rep too
+            bpts, bval = _pts_override
+        fn = build_pd(dom, mesh, axes, n, ks, kt, rep_axis=_rep_axis)
+        with obs_trace.span(f"stkde.{strat}.execute", blocking=False):
+            out = fn(bpts, bval)
+            out = out.reshape(A, B, gx_loc, gy_loc, dom.Gt)
+            out = out.transpose(0, 2, 1, 3, 4).reshape(
+                A * gx_loc, B * gy_loc, dom.Gt)
+            return out[: dom.Gx, : dom.Gy, :]
 
 
 def build_pd(dom: Domain, mesh: Mesh, axes, n: int,
-             ks=km.DEFAULT_KS, kt=km.DEFAULT_KT, rep_axis=None):
+             ks=km.DEFAULT_KS, kt=km.DEFAULT_KT, rep_axis=None,
+             collectives: bool = True):
     """Jitted PD (owner-computes + halo exchange) over home-bucketed points.
 
     Input layout: (A, B, cap, 3) — or (R, A, B, cap, 3) with rep_axis for
     the hybrid/REP strategy. Dry-run lowerable with ShapeDtypeStructs.
+    ``collectives=False`` skips the halo ppermute folds (and rep psum) —
+    the reconciliation probe for the planner's ``comm_s`` term; the output
+    is then the unfolded interior (numerically incomplete by design).
     """
     ax, ay = axes
     A, B = _mesh_sizes(mesh, axes)
@@ -258,6 +307,8 @@ def build_pd(dom: Domain, mesh: Mesh, axes, n: int,
             ]
         )
         L = _pb(p - shift, ldom, variant="sym", ks=ks, kt=kt, n_total=n)
+        if not collectives:
+            return L[Hs : Hs + gx_loc, Hs : Hs + gy_loc, :][None, None]
         # ---- fold halos: X phase (full-y slabs), then Y phase (interior-x)
         fwd_x = [(k, k + 1) for k in range(A - 1)]
         bwd_x = [(k, k - 1) for k in range(1, A)]
@@ -602,7 +653,7 @@ def stkde_dd_lpt(
                 (pos_blk[0, s, 0], pos_blk[0, s, 1], pos_blk[0, s, 2]),
             )
 
-        g0 = jax.lax.pcast(
+        g0 = pcast(
             jnp.zeros((Gxp, Gyp, Gtp), jnp.float32), (ax, ay), to="varying"
         )
         g = jax.lax.fori_loop(0, k, place, g0)

@@ -135,8 +135,9 @@ def moe_apply_a2a(cfg, p, x, mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
     whole received buffer and select (overcompute factor E/TP; exact for
     dbrx's 16e/16 ranks — noted in EXPERIMENTS).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
     from repro.distributed import sharding as _sh
 
     dt = x.dtype

@@ -1,0 +1,199 @@
+"""Planner predicted-vs-measured reconciliation.
+
+``core/plan.py`` prices every execution strategy with a three-term model
+(init = HBM memset, compute = point work x imbalance, comm = collectives)
+— this module closes the loop: it *measures* the same three terms on a live
+mesh and joins them against the prediction, per strategy and per term, with
+relative errors. Every future perf PR gets a phase-level baseline instead
+of one opaque wall-clock number.
+
+Measurement protocol (differential timing — host wall clocks cannot see
+inside one jitted program):
+
+  init_s     jitted memset of the strategy's per-device grid buffer
+  nocomm     the strategy compiled with collectives stripped
+             (``build_*(..., collectives=False)``; DD has none to strip)
+  full       the production strategy
+
+  measured.init    = t(init)
+  measured.compute = max(t(nocomm) - t(init), 0)
+  measured.comm    = max(t(full) - t(nocomm), 0)
+  measured.total   = t(full)
+
+All timings flow through ``obs.timing.timeit`` (shared warmup +
+block_until_ready) and therefore appear as spans in the Chrome trace.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import timing, trace
+
+TERMS = ("init_s", "compute_s", "comm_s", "total_s")
+
+# strategies with a full phase-probe implementation
+PROBED = ("dr", "dd", "pd")
+
+
+def _default_hw():
+    """V5E on TPU backends; rough host constants on CPU (so the smoke-run
+    relative errors are about calibration, not about CPU != TPU)."""
+    from repro.core import plan
+
+    try:
+        import jax
+
+        backend = jax.default_backend()
+    except Exception:
+        backend = "cpu"
+    return plan.HOST if backend == "cpu" else plan.V5E
+
+
+def measure_strategy(
+    points: np.ndarray,
+    dom,
+    mesh,
+    strategy: str,
+    axes: Tuple[str, str] = ("data", "model"),
+    reps: int = 3,
+    cap: Optional[int] = None,
+) -> Dict[str, float]:
+    """Measured init/compute/comm/total seconds for one strategy."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed import stkde_dist as sd
+
+    if strategy not in PROBED:
+        raise ValueError(f"phase probes implemented for {PROBED}, "
+                         f"got {strategy!r}")
+    pts = np.asarray(points, dtype=np.float32)
+    n = len(pts)
+    A, B = (mesh.shape[a] for a in axes)
+    gx_loc, gy_loc = sd._device_grid_dims(dom, A, B)
+
+    with trace.span(f"reconcile.{strategy}.prepare", n=n):
+        if strategy == "dr":
+            args = (sd.prepare_dr(pts, dom, mesh, axes),)
+            local_shape = dom.grid_shape
+            full = sd.build_dr(dom, mesh, axes, n)
+            nocomm = sd.build_dr(dom, mesh, axes, n, collectives=False)
+        elif strategy == "dd":
+            args = sd.prepare_dd(pts, dom, mesh, axes, cap=cap)
+            local_shape = (gx_loc, gy_loc, dom.Gt)
+            full = sd.build_dd(dom, mesh, axes, n)
+            nocomm = full                       # DD is communication-free
+        else:  # pd
+            args = sd.prepare_pd(pts, dom, mesh, axes, cap=cap)
+            local_shape = (gx_loc + 2 * dom.Hs, gy_loc + 2 * dom.Hs, dom.Gt)
+            full = sd.build_pd(dom, mesh, axes, n)
+            nocomm = sd.build_pd(dom, mesh, axes, n, collectives=False)
+
+    memset = jax.jit(lambda v: jnp.full(local_shape, v, jnp.float32))
+    t_init = timing.timeit(
+        lambda: memset(0.0), reps=reps,
+        name=f"reconcile.{strategy}.init", strategy=strategy).best
+    t_nocomm = timing.timeit(
+        lambda: nocomm(*args), reps=reps,
+        name=f"reconcile.{strategy}.nocomm", strategy=strategy).best
+    if nocomm is full:
+        t_full = t_nocomm
+    else:
+        t_full = timing.timeit(
+            lambda: full(*args), reps=reps,
+            name=f"reconcile.{strategy}.full", strategy=strategy).best
+    return {
+        "init_s": t_init,
+        "compute_s": max(t_nocomm - t_init, 0.0),
+        "comm_s": max(t_full - t_nocomm, 0.0),
+        "total_s": t_full,
+    }
+
+
+def reconcile(
+    predicted: Dict[str, Dict[str, float]],
+    measured: Dict[str, Dict[str, float]],
+) -> List[Dict]:
+    """Join per-strategy predicted and measured cost tables term-by-term.
+
+    Relative error convention: (measured - predicted) / max(predicted, eps)
+    — positive means the planner was optimistic for that term.
+    """
+    rows = []
+    for strat in measured:
+        pred = predicted.get(strat, {})
+        for term in TERMS:
+            p = pred.get(term)
+            m = measured[strat].get(term)
+            if m is None:
+                continue
+            rel = None
+            if p is not None:
+                rel = (m - p) / max(abs(p), 1e-12)
+            rows.append({
+                "strategy": strat,
+                "term": term,
+                "predicted_s": p,
+                "measured_s": m,
+                "rel_err": rel,
+            })
+    return rows
+
+
+def report_text(rows: List[Dict]) -> str:
+    """Fixed-width reconciliation report (also rendered by make_report)."""
+    lines = [
+        f"{'strategy':<10} {'term':<10} {'predicted_s':>12} "
+        f"{'measured_s':>12} {'rel_err':>9}",
+        "-" * 57,
+    ]
+    for r in rows:
+        p = "-" if r["predicted_s"] is None else f"{r['predicted_s']:.6f}"
+        e = "-" if r["rel_err"] is None else f"{r['rel_err']:+.2f}"
+        lines.append(
+            f"{r['strategy']:<10} {r['term']:<10} {p:>12} "
+            f"{r['measured_s']:>12.6f} {e:>9}"
+        )
+    return "\n".join(lines)
+
+
+def run(
+    points: np.ndarray,
+    dom,
+    mesh,
+    strategies: Sequence[str] = PROBED,
+    axes: Tuple[str, str] = ("data", "model"),
+    reps: int = 3,
+    hw=None,
+) -> Dict:
+    """Full reconciliation: plan, measure, join. Returns rows + report."""
+    from repro.core import bucketing, plan
+
+    pts = np.asarray(points, dtype=np.float32)
+    A, B = (mesh.shape[a] for a in axes)
+    hw = hw or _default_hw()
+    from repro.distributed.stkde_dist import _device_grid_dims
+
+    gx_loc, gy_loc = _device_grid_dims(dom, A, B)
+    loads = bucketing.bucket_points_home(
+        pts, dom, (gx_loc, gy_loc, dom.Gt)
+    ).counts.reshape(-1).astype(np.float64)
+    predicted = plan.estimate(dom, len(pts), (A, B), loads=loads, hw=hw)
+
+    measured = {}
+    with trace.span("reconcile.measure", mesh=f"{A}x{B}"):
+        for strat in strategies:
+            measured[strat] = measure_strategy(
+                pts, dom, mesh, strat, axes=axes, reps=reps
+            )
+    rows = reconcile(predicted, measured)
+    return {
+        "mesh": f"{A}x{B}",
+        "n": int(len(pts)),
+        "grid": f"{dom.Gx}x{dom.Gy}x{dom.Gt}",
+        "hw": "host" if hw is plan.HOST else "v5e",
+        "rows": rows,
+        "report": report_text(rows),
+    }

@@ -1,0 +1,83 @@
+"""The one shared benchmark timer.
+
+Every reported number in benchmarks/ and the runner flows through
+``timeit`` so warmup, ``jax.block_until_ready`` and span/metric recording
+happen in exactly one place (previously ~10 ad-hoc ``perf_counter``
+snippets, each with its own blocking discipline).
+
+``timeit`` is dependency-free: jax is imported lazily and only when the
+result needs blocking; plain-python callables time fine without jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, List, Optional
+
+from . import metrics, trace
+
+
+def _block(x: Any) -> Any:
+    """jax.block_until_ready when jax is importable; identity otherwise."""
+    try:
+        import jax
+    except Exception:
+        return x
+    try:
+        return jax.block_until_ready(x)
+    except Exception:
+        return x
+
+
+@dataclasses.dataclass
+class TimingResult:
+    name: str
+    times: List[float]                 # per-rep seconds, in run order
+
+    @property
+    def best(self) -> float:
+        return min(self.times)
+
+    @property
+    def mean(self) -> float:
+        return statistics.fmean(self.times)
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times)
+
+
+def timeit(
+    fn: Callable[[], Any],
+    reps: int = 3,
+    warmup: int = 1,
+    name: Optional[str] = None,
+    block: bool = True,
+    **attrs,
+) -> TimingResult:
+    """Time ``fn()`` over ``reps`` measured calls after ``warmup`` calls.
+
+    Each measured rep is recorded as a span ``bench.<name>`` (attr
+    ``rep=i``) and observed into histogram ``<name>_s`` when ``name`` is
+    given. Returns all rep times; callers pick ``.best`` (min — the
+    benchmark convention here) or ``.median``.
+    """
+    label = name or getattr(fn, "__name__", "anon")
+    for _ in range(max(0, warmup)):
+        out = fn()
+        if block:
+            _block(out)
+    times = []
+    hist = metrics.histogram(f"{label}_s") if name else None
+    for i in range(max(1, reps)):
+        with trace.span(f"bench.{label}", rep=i, **attrs):
+            t0 = time.perf_counter()
+            out = fn()
+            if block:
+                _block(out)
+            dt = time.perf_counter() - t0
+        times.append(dt)
+        if hist is not None:
+            hist.observe(dt)
+    return TimingResult(name=label, times=times)

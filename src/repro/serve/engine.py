@@ -15,6 +15,7 @@ Serving path used by examples/serve_lm.py and the decode dry-run cells:
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
@@ -22,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import model as model_lib
 from repro.models.model import DecodeState
 
@@ -48,6 +50,7 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new: int = 32
     out: Optional[np.ndarray] = None
+    t_submit: float = 0.0         # perf_counter at submit(); queue-wait base
 
 
 @dataclasses.dataclass
@@ -71,9 +74,10 @@ class ServingEngine:
         self._rng = jax.random.PRNGKey(ecfg.seed)
 
     def submit(self, uid: int, prompt: np.ndarray, max_new: int = 32):
+        obs.counter("serve.requests").inc()
         self.queue.append(
             Request(uid=uid, prompt=np.asarray(prompt, np.int32),
-                    max_new=max_new)
+                    max_new=max_new, t_submit=time.perf_counter())
         )
 
     # ---------------------------------------------------------------- run
@@ -99,30 +103,49 @@ class ServingEngine:
 
     def _run_bucket(self, reqs: List[Request]):
         B = len(reqs)
-        prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
-        logits, state = self._prefill(self.params, prompts)
-        max_new = max(r.max_new for r in reqs)
-        tok = self._sample(logits[:, -1])[:, None]
-        active = np.ones(B, bool)
-        gen = [[] for _ in range(B)]
-        for r_i in range(B):
-            gen[r_i].append(int(tok[r_i, 0]))
-        for _ in range(max_new - 1):
-            logits, state = self._step(self.params, state, tok)
+        t_start = time.perf_counter()
+        qw = obs.histogram("serve.queue_wait_s")
+        for r in reqs:
+            if r.t_submit > 0:
+                qw.observe(max(t_start - r.t_submit, 0.0))
+        with obs.span("serve.bucket", batch=B, seq=len(reqs[0].prompt)):
+            prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
+            with obs.span("serve.prefill") as sp:
+                logits, state = self._prefill(self.params, prompts)
+                jax.block_until_ready(logits)
+            obs.histogram("serve.prefill_s").observe(sp.duration_s)
+            max_new = max(r.max_new for r in reqs)
             tok = self._sample(logits[:, -1])[:, None]
-            host = np.asarray(tok[:, 0])
+            active = np.ones(B, bool)
+            gen = [[] for _ in range(B)]
             for r_i in range(B):
-                if not active[r_i]:
-                    continue
-                if len(gen[r_i]) >= reqs[r_i].max_new:
-                    active[r_i] = False
-                    continue
-                t = int(host[r_i])
-                gen[r_i].append(t)
-                if t == self.ecfg.eos_id:
-                    active[r_i] = False
-            if not active.any():
-                break
+                gen[r_i].append(int(tok[r_i, 0]))
+            decode_h = obs.histogram("serve.decode_token_s")
+            n_tok = B
+            t_dec0 = time.perf_counter()
+            for _ in range(max_new - 1):
+                t0 = time.perf_counter()
+                logits, state = self._step(self.params, state, tok)
+                tok = self._sample(logits[:, -1])[:, None]
+                host = np.asarray(tok[:, 0])   # device sync
+                decode_h.observe(time.perf_counter() - t0)
+                for r_i in range(B):
+                    if not active[r_i]:
+                        continue
+                    if len(gen[r_i]) >= reqs[r_i].max_new:
+                        active[r_i] = False
+                        continue
+                    t = int(host[r_i])
+                    gen[r_i].append(t)
+                    n_tok += 1
+                    if t == self.ecfg.eos_id:
+                        active[r_i] = False
+                if not active.any():
+                    break
+            dt_dec = time.perf_counter() - t_dec0
+            obs.counter("serve.tokens").inc(n_tok)
+            if dt_dec > 0:
+                obs.gauge("serve.tokens_per_s").set(n_tok / dt_dec)
         for r_i, r in enumerate(reqs):
             self.done[r.uid] = np.asarray(gen[r_i][: r.max_new], np.int32)
 

@@ -11,16 +11,21 @@ needs:
     real pod this feeds the reschedule/hot-standby controller; here it is a
     log + counter the tests assert on)
   * NaN-loss circuit breaker: skip the update and (optionally) restore
+
+Step timing flows through ``repro.obs`` (span ``train.step``, histogram
+``train.step_s``) so runner wall times share one code path with the
+benchmarks and show up in the Chrome trace.
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
-import time
 from typing import Any, Callable, Iterable, Optional
 
 import jax
 import numpy as np
+
+from repro import obs
 
 from . import checkpoint as ckpt_lib
 
@@ -84,23 +89,28 @@ class TrainRunner:
         for batch in batches:
             if self.step >= self.cfg.max_steps or self._preempted:
                 break
-            t0 = time.perf_counter()
-            params, opt_state, metrics = self.train_step(
-                self.params, self.opt_state, batch
-            )
-            loss = float(metrics["loss"])
-            if not np.isfinite(loss):
-                self.log(f"[runner] step {self.step}: non-finite loss "
-                         f"{loss}; skipping update")
-                self.step += 1
-                continue
-            self.params, self.opt_state = params, opt_state
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            with obs.span("train.step", step=self.step) as sp:
+                params, opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch
+                )
+                loss = float(metrics["loss"])
+                sp.set(loss=loss)
+                if not np.isfinite(loss):
+                    self.log(f"[runner] step {self.step}: non-finite loss "
+                             f"{loss}; skipping update")
+                    obs.counter("train.nonfinite_steps").inc()
+                    self.step += 1
+                    continue
+                self.params, self.opt_state = params, opt_state
+                jax.block_until_ready(metrics["loss"])
+            dt = sp.duration_s
+            obs.histogram("train.step_s").observe(dt)
+            obs.counter("train.steps").inc()
             if ewma is None:
                 ewma = dt
             elif dt > self.cfg.straggler_factor * ewma:
                 self.straggler_events.append((self.step, dt, ewma))
+                obs.counter("train.stragglers").inc()
                 self.log(f"[runner] straggler step {self.step}: "
                          f"{dt * 1e3:.1f}ms vs ewma {ewma * 1e3:.1f}ms")
                 # do not poison the EWMA with the outlier

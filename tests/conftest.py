@@ -13,7 +13,27 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+import repro.compat  # noqa: F401  (JAX version shims before test imports)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # container has no hypothesis; use the shim
+    from _hypothesis_shim import install as _install_hypothesis_shim
+
+    _install_hypothesis_shim()
+
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_obs():
+    """Fresh global tracer + metrics registry per test (obs state is
+    process-global by design; tests must not see each other's spans)."""
+    yield
+    from repro.obs import metrics, trace
+
+    trace.reset()
+    metrics.reset()

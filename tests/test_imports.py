@@ -1,0 +1,24 @@
+"""Every module under ``repro`` must import cleanly on the installed JAX.
+
+Guards against version-skew regressions (e.g. ``from jax import shard_map``
+on a JAX without it) anywhere in the tree, including modules no other test
+touches.
+"""
+import importlib
+import pkgutil
+
+import pytest
+
+import repro
+
+
+def _all_modules():
+    names = ["repro"]
+    for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+        names.append(m.name)
+    return sorted(names)
+
+
+@pytest.mark.parametrize("name", _all_modules())
+def test_module_imports(name):
+    importlib.import_module(name)

@@ -31,7 +31,9 @@ def test_hint_applies_under_mesh():
     x = jnp.ones((8, 4))
     out = jax.jit(f)(x)
     ns = out.sharding
-    assert ns.spec == jax.sharding.PartitionSpec(("data",), "model"), ns.spec
+    P = jax.sharding.PartitionSpec
+    # newer JAX normalizes the singleton axis tuple; accept both spellings
+    assert ns.spec in (P(("data",), "model"), P("data", "model")), ns.spec
     print("hint spec ok", ns.spec)
     """)
     run_with_devices(code, 8)
