@@ -84,6 +84,44 @@ out["_metrics"] = metrics.export()
 print("RESULT" + json.dumps(out))
 """
 
+_CHAOS_SUBPROC = r"""
+import json
+import repro.compat
+import numpy as np, jax
+from repro.core import pb, bench_suite
+from repro.core.api import stkde
+from repro.resilience import faults
+from repro.obs import metrics, timeit, trace
+
+suite = bench_suite(max_voxels=500_000, max_points=8_000)
+inst = suite[{name!r}]
+dom = inst.domain()
+pts = inst.points()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+want = np.asarray(pb(pts, dom))
+reps = {reps}
+clean = timeit(lambda: stkde(pts, dom, mesh=mesh, strategy="pd"),
+               reps=reps, name="chaos.clean", instance={name!r}).mean
+faults.configure({spec!r}, seed={seed})
+chaos = timeit(lambda: stkde(pts, dom, mesh=mesh, strategy="pd"),
+               reps=reps, name="chaos.injected", instance={name!r}).mean
+got = np.asarray(stkde(pts, dom, mesh=mesh, strategy="pd"))
+ok = bool(np.abs(got - want).max() < 1e-5)
+c = metrics.export()["counters"]
+rows = {{"instance": {name!r}, "bench": "chaos", "spec": {spec!r},
+        "clean_s": clean, "chaos_s": chaos,
+        "recovery_overhead_pct":
+            100.0 * (chaos - clean) / clean if clean else None,
+        "correct": ok,
+        "injected": c.get("resilience.injected", 0),
+        "retries": c.get("resilience.retries", 0),
+        "fallbacks": c.get("resilience.fallbacks", 0),
+        "gave_up": c.get("resilience.gave_up", 0)}}
+rows["_trace_events"] = trace.get_tracer().export_events()
+rows["_metrics"] = metrics.export()
+print("RESULT" + json.dumps(rows))
+"""
+
 _sub_pid = 0   # synthetic pid per subprocess for the merged Chrome trace
 
 
@@ -93,6 +131,10 @@ def _run_sub(code: str, n_dev: int = 8) -> dict:
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
     env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    # benchmarks measure; chaos is opt-in per section (run_chaos passes
+    # its spec explicitly), so the ambient injection env must not leak
+    # into direct-strategy timing subprocesses
+    env.pop("REPRO_FAULTS", None)
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=1200)
     if proc.returncode != 0:
@@ -120,6 +162,29 @@ def run_reconcile(instance="Flu_Mr-Hb", quick=False) -> List[Dict]:
     r = _run_sub(_RECONCILE_SUBPROC.format(
         name=instance, reps=2 if quick else 3))
     print(r["report"])
+    return [r]
+
+
+DEFAULT_CHAOS_SPEC = ("dist.halo:nan:0.2,ckpt.write:corrupt:0.2,"
+                      "data.read:drop:0.1")
+
+
+def run_chaos(instance="Flu_Mr-Hb", spec=DEFAULT_CHAOS_SPEC, seed=42,
+              quick=False) -> List[Dict]:
+    """Chaos benchmark: the traced api-level query under fault injection.
+
+    Times the same PD query clean and with ``spec`` injection enabled
+    (retry + fallback-to-dr absorb the faults), reporting the recovery
+    overhead — the number ``make_report.py`` surfaces as the price of
+    resilience.
+    """
+    r = _run_sub(_CHAOS_SUBPROC.format(
+        name=instance, spec=spec, seed=seed, reps=3 if quick else 5))
+    print(f"  {instance}: clean={r['clean_s']:.3f}s "
+          f"chaos={r['chaos_s']:.3f}s "
+          f"(+{r['recovery_overhead_pct']:.1f}% recovery overhead; "
+          f"{r['injected']:.0f} injected, {r['fallbacks']:.0f} fallbacks, "
+          f"correct={r['correct']})")
     return [r]
 
 

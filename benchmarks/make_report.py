@@ -120,6 +120,45 @@ def reconcile_table(results: List[dict]) -> str:
     return "\n".join(lines)
 
 
+def resilience_table(chaos_rows: List[dict], metrics: dict) -> str:
+    """Markdown resilience section: chaos-benchmark recovery overhead
+    (results/bench/results.json "chaos" rows, from ``run.py --chaos``)
+    plus the resilience.* counters from metrics.json."""
+    lines = [
+        "| instance | spec | clean s | chaos s | recovery overhead | "
+        "injected | retries | fallbacks | correct |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in chaos_rows:
+        lines.append(
+            f"| {r.get('instance', '?')} | `{r.get('spec', '')}` | "
+            f"{r['clean_s']:.3f} | {r['chaos_s']:.3f} | "
+            f"{r['recovery_overhead_pct']:+.1f}% | "
+            f"{r.get('injected', 0):.0f} | {r.get('retries', 0):.0f} | "
+            f"{r.get('fallbacks', 0):.0f} | "
+            f"{'Y' if r.get('correct') else 'N'} |"
+        )
+    counters = {
+        k: v for k, v in metrics.get("counters", {}).items()
+        if k.startswith("resilience.")
+    }
+    if counters:
+        lines.append("")
+        lines.append("| resilience counter | value |")
+        lines.append("|---|---|")
+        for k in sorted(counters):
+            lines.append(f"| `{k}` | {counters[k]:.0f} |")
+    back = metrics.get("histograms", {}).get("resilience.backoff_s")
+    if back:
+        lines.append(
+            f"\nBackoff time: {back['count']:.0f} sleeps, "
+            f"{back['sum']*1e3:.1f} ms total "
+            f"(p95 {back['p95']*1e3:.2f} ms) — the injected-fault "
+            "recovery budget."
+        )
+    return "\n".join(lines)
+
+
 def summarize(rows):
     ok = sum(1 for r in rows if r.get("ok") and not r.get("skipped"))
     skip = sum(1 for r in rows if r.get("skipped"))
@@ -154,6 +193,21 @@ def main():
         print("\nLarge compute rel-err on host CPU is expected: the "
               "planner models TPU FLOPs/bandwidth, not XLA:CPU dispatch "
               "overhead; calibrate `plan.HOST` from these rows.")
+    res_p = "results/bench/results.json"
+    met_p = "results/bench/metrics.json"
+    chaos_rows = []
+    met = {}
+    if os.path.exists(res_p):
+        with open(res_p) as f:
+            chaos_rows = json.load(f).get("chaos", [])
+    if os.path.exists(met_p):
+        with open(met_p) as f:
+            met = json.load(f)
+    if chaos_rows or any(k.startswith("resilience.")
+                         for k in met.get("counters", {})):
+        print("\n### Resilience — chaos benchmark "
+              "(`run.py --chaos`, docs/resilience.md)\n")
+        print(resilience_table(chaos_rows, met))
 
 
 if __name__ == "__main__":

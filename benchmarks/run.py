@@ -17,6 +17,12 @@ With ``--trace``, also writes results/bench/trace.json (Chrome trace —
 load in chrome://tracing or Perfetto) and metrics.json, and the parallel
 section additionally runs the planner predicted-vs-measured phase
 reconciliation (-> reconcile.json + a printed report).
+
+With ``--chaos``, additionally runs the fault-injection benchmark
+(``REPRO_FAULTS`` spec override honored): the traced api-level STKDE
+query timed clean vs under injection, reporting recovery overhead
+(retry/backoff + fallback-to-dr); ``make_report.py`` renders the
+resilience section from these rows + metrics.json.
 """
 import argparse
 import json
@@ -36,6 +42,9 @@ def main() -> None:
     ap.add_argument("--out", default="results/bench")
     ap.add_argument("--trace", action="store_true",
                     help="export Chrome trace + metrics + reconciliation")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the fault-injection benchmark (recovery "
+                         "overhead; REPRO_FAULTS overrides the spec)")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
     all_results = {}
@@ -76,6 +85,15 @@ def main() -> None:
         else:
             print("  (no dry-run artifacts; run repro.launch.dryrun first)")
 
+    if args.chaos:
+        print("== chaos: fault-injection recovery overhead (8 devices) ==")
+        from benchmarks import bench_stkde_parallel
+        spec = os.environ.get(
+            "REPRO_FAULTS", bench_stkde_parallel.DEFAULT_CHAOS_SPEC)
+        seed = int(os.environ.get("REPRO_FAULTS_SEED", "42"))
+        all_results["chaos"] = bench_stkde_parallel.run_chaos(
+            spec=spec, seed=seed, quick=args.quick)
+
     with open(os.path.join(args.out, "results.json"), "w") as f:
         json.dump(all_results, f, indent=1, default=float)
 
@@ -102,7 +120,8 @@ def main() -> None:
             derived = (r.get("sym_speedup") or r.get("dr_speedup")
                        or r.get("bottleneck") or r.get("mxu_fill")
                        or r.get("replication_factor")
-                       or r.get("tinf_sched_pct") or "")
+                       or r.get("tinf_sched_pct")
+                       or r.get("recovery_overhead_pct") or "")
             print(f"{section}:{name},{'' if t is None else round(t, 1)},"
                   f"{derived}")
 

@@ -4,6 +4,12 @@
     grid = stkde(points, dom)                       # single device
     grid = stkde(points, dom, mesh=mesh)            # auto strategy on mesh
     grid = stkde(points, dom, mesh=mesh, strategy="pd")
+
+Robustness contract (docs/resilience.md): inputs are validated at this
+boundary (typed ``ReproValidationError`` instead of downstream shape
+errors), outputs are NaN/Inf-checked, and a failed distributed strategy
+build/execution falls back to the ``dr`` baseline (counted in
+``resilience.fallbacks``) unless ``fallback=False``.
 """
 from __future__ import annotations
 
@@ -12,10 +18,52 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.resilience.degrade import ensure_finite
+from repro.resilience.errors import ReproError, ReproValidationError
+
 from .geometry import Domain
 from . import kernels_math as km
 from .pb import pb as _pb
 from . import plan as _plan
+
+
+def validate_inputs(points, dom: Domain) -> np.ndarray:
+    """API-boundary validation; returns points as float32 ``(n, 3)``.
+
+    Rejects (typed ``ReproValidationError``): empty point sets, wrong
+    shapes, NaN/Inf coordinates, non-positive bandwidths/resolutions,
+    and time coordinates outside the domain's time window (± one
+    temporal bandwidth — points just outside still radiate density in).
+    """
+    pts = np.asarray(points, dtype=np.float32)
+    if pts.ndim != 2 or pts.shape[1] != 3:
+        raise ReproValidationError(
+            f"points must be (n, 3) [x, y, t]; got shape {pts.shape}"
+        )
+    if len(pts) == 0:
+        raise ReproValidationError("empty point set")
+    if not np.isfinite(pts).all():
+        bad = int(len(pts) - np.isfinite(pts).all(axis=1).sum())
+        raise ReproValidationError(
+            f"{bad}/{len(pts)} points have NaN/Inf coordinates"
+        )
+    if not (dom.hs > 0 and dom.ht > 0):
+        raise ReproValidationError(
+            f"bandwidths must be positive: hs={dom.hs} ht={dom.ht}"
+        )
+    if not (dom.sres > 0 and dom.tres > 0):
+        raise ReproValidationError(
+            f"resolutions must be positive: sres={dom.sres} tres={dom.tres}"
+        )
+    t_lo, t_hi = dom.ot - dom.ht, dom.ot + dom.gt + dom.ht
+    t = pts[:, 2]
+    if t.min() < t_lo or t.max() > t_hi:
+        n_out = int(((t < t_lo) | (t > t_hi)).sum())
+        raise ReproValidationError(
+            f"{n_out}/{len(pts)} points outside the domain time window "
+            f"[{t_lo}, {t_hi}] (ot={dom.ot} gt={dom.gt} ht={dom.ht})"
+        )
+    return pts
 
 
 def stkde(
@@ -28,20 +76,32 @@ def stkde(
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
     use_tiled_kernel: bool = False,
+    validate: bool = True,
+    fallback: bool = True,
 ) -> jnp.ndarray:
     """Space-time kernel density grid for ``points`` over ``dom``.
 
     strategy: "auto" | "dr" | "dd" | "pd" | "dd_lpt" | "hybrid"
               (single-device when mesh is None: scatter PB-SYM, or the
               Pallas tiled kernel with use_tiled_kernel=True).
+    validate: typed input validation at this boundary (see
+              ``validate_inputs``).
+    fallback: on mesh strategy build/execution failure or non-finite
+              output, retry once with the ``dr`` baseline.
     """
-    pts = np.asarray(points, dtype=np.float32)
+    if validate:
+        pts = validate_inputs(points, dom)
+    else:
+        pts = np.asarray(points, dtype=np.float32)
     if mesh is None:
         if use_tiled_kernel:
             from repro.kernels import stkde_tiled
 
-            return stkde_tiled(pts, dom, ks=ks, kt=kt)
-        return _pb(pts, dom, variant="sym", ks=ks, kt=kt)
+            return ensure_finite(stkde_tiled(pts, dom, ks=ks, kt=kt),
+                                 "stkde.tiled")
+        return ensure_finite(
+            _pb(pts, dom, variant="sym", ks=ks, kt=kt), "stkde.pb"
+        )
 
     from repro.distributed import STRATEGIES
     from . import bucketing
@@ -63,4 +123,18 @@ def stkde(
     kw = dict(axes=axes, ks=ks, kt=kt)
     if strategy == "hybrid":
         kw["rep_axis"] = rep_axis or "pod"
-    return fn(pts, dom, mesh, **kw)
+    try:
+        return ensure_finite(fn(pts, dom, mesh, **kw),
+                             f"stkde.{strategy}")
+    except (ReproError, ValueError) as e:
+        if not fallback or strategy == "dr":
+            raise
+        from repro import obs
+
+        obs.counter("resilience.fallbacks").inc()
+        obs.counter(f"resilience.fallbacks.stkde.{strategy}").inc()
+        with obs.span("resilience.fallback", frm=strategy, to="dr",
+                      error=type(e).__name__):
+            out = STRATEGIES["dr"](pts, dom, mesh, axes=axes, ks=ks,
+                                   kt=kt)
+        return ensure_finite(out, "stkde.dr")

@@ -13,6 +13,13 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
+from repro.resilience import RetryPolicy, faults, with_retry
+
+# transient read faults (dropped shards, storage hiccups) retry quickly;
+# a batch that cannot be produced after that is a real error
+_READ_POLICY = RetryPolicy(max_attempts=4, base_delay_s=0.005,
+                           max_delay_s=0.1)
+
 
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
@@ -37,6 +44,13 @@ class SyntheticLM:
         self.next_tok = rng.integers(0, v, size=(v, 4))
 
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Batch for ``step`` (retried through the ``data.read`` fault
+        site — the stream is seekable, so a re-read is exact)."""
+        return with_retry(lambda: self._batch_at(step),
+                          policy=_READ_POLICY, site="data.read")
+
+    def _batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        faults.fault_point("data.read")
         cfg = self.cfg
         rows = np.arange(cfg.host_id, cfg.global_batch, cfg.n_host)
         B = len(rows)
@@ -83,6 +97,12 @@ def stkde_stream(instance, chunk: int = 100_000, seed: Optional[int] = None):
             instance, n=take,
             seed=(instance.seed if seed is None else seed) + 7919 * i,
         )
-        yield sub.points(), n
+
+        def read_chunk(sub=sub):
+            faults.fault_point("data.read")
+            return sub.points()
+
+        yield with_retry(read_chunk, policy=_READ_POLICY,
+                         site="data.read"), n
         done += take
         i += 1

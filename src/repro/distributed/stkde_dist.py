@@ -37,6 +37,7 @@ from repro.core.geometry import Domain
 from repro.core import bucketing, kernels_math as km
 from repro.core.pb import pb as _pb
 from repro.obs import trace as obs_trace
+from repro.resilience import faults as _faults
 from . import partition
 
 PARK = -1e8  # parked coordinate for invalid/padded points
@@ -259,13 +260,20 @@ def stkde_pd(
                 bpts, bval = prepare_pd(pts, dom, mesh, axes, cap=cap)
         else:  # hybrid path: (R, A, B, cap, 3) sharded over rep too
             bpts, bval = _pts_override
+        # fault site dist.halo: an injected OOM here models a failed
+        # strategy build (halo buffers are the PD-only allocation); the
+        # api-level fallback then reroutes the query to the dr baseline.
+        _faults.fault_point("dist.halo")
         fn = build_pd(dom, mesh, axes, n, ks, kt, rep_axis=_rep_axis)
         with obs_trace.span(f"stkde.{strat}.execute", blocking=False):
             out = fn(bpts, bval)
             out = out.reshape(A, B, gx_loc, gy_loc, dom.Gt)
             out = out.transpose(0, 2, 1, 3, 4).reshape(
                 A * gx_loc, B * gy_loc, dom.Gt)
-            return out[: dom.Gx, : dom.Gy, :]
+            # nan-kind injection poisons the folded halos; callers
+            # validate via resilience.degrade.ensure_finite
+            return _faults.poison(
+                "dist.halo", out[: dom.Gx, : dom.Gy, :])
 
 
 def build_pd(dom: Domain, mesh: Mesh, axes, n: int,

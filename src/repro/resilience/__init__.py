@@ -1,0 +1,51 @@
+"""Resilience layer: fault injection, retry/backoff, graceful degradation.
+
+  errors   typed failure taxonomy + the ``is_transient`` retryability oracle
+  faults   deterministic seedable fault injector (``REPRO_FAULTS`` env)
+  retry    ``with_retry`` — exponential backoff + jitter + deadline
+  degrade  coarsen/subsample fallback for STKDE queries (tagged results)
+
+``faults``/``retry``/``errors`` depend only on stdlib + ``repro.obs``
+(itself stdlib-only), so any layer of the stack can import them without
+cycles; ``degrade`` additionally uses ``core.geometry`` and numpy.
+"""
+from . import degrade, errors, faults, retry
+from .degrade import DegradedResult, DegradePolicy, run_with_degrade
+from .errors import (
+    AdmissionError,
+    CheckpointCorruptError,
+    DeadlineExceededError,
+    FaultInjectedError,
+    NonFiniteOutputError,
+    ReproError,
+    ReproValidationError,
+    RetriesExhaustedError,
+    is_transient,
+)
+from .faults import FaultInjector, configure, fault_point, get_injector
+from .retry import RetryPolicy, with_retry
+
+__all__ = [
+    "degrade",
+    "errors",
+    "faults",
+    "retry",
+    "DegradedResult",
+    "DegradePolicy",
+    "run_with_degrade",
+    "AdmissionError",
+    "CheckpointCorruptError",
+    "DeadlineExceededError",
+    "FaultInjectedError",
+    "NonFiniteOutputError",
+    "ReproError",
+    "ReproValidationError",
+    "RetriesExhaustedError",
+    "is_transient",
+    "FaultInjector",
+    "configure",
+    "fault_point",
+    "get_injector",
+    "RetryPolicy",
+    "with_retry",
+]

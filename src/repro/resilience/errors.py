@@ -1,0 +1,106 @@
+"""Typed error taxonomy for the resilience layer.
+
+Every failure the stack can recover from (or deliberately surface) has a
+class here, so callers branch on type instead of string-matching messages.
+``is_transient`` is the single retryability oracle used by ``retry`` —
+injected faults, real XLA RESOURCE_EXHAUSTED errors, and filesystem
+hiccups are transient; validation errors never are.
+"""
+from __future__ import annotations
+
+
+class ReproError(Exception):
+    """Base class for every typed error raised by this repo."""
+
+
+class ReproValidationError(ReproError, ValueError):
+    """Malformed input rejected at the API boundary (never retried)."""
+
+
+class AdmissionError(ReproError):
+    """Request rejected at submit time (queue full, over limits).
+
+    ``reason`` is a stable machine-readable slug (e.g. ``queue_full``).
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        self.reason = reason
+        super().__init__(detail or reason)
+
+
+class DeadlineExceededError(ReproError):
+    """A per-request or per-call deadline elapsed."""
+
+
+class NonFiniteOutputError(ReproError):
+    """A kernel/strategy produced NaN/Inf where finite density was due."""
+
+
+class CheckpointCorruptError(ReproError):
+    """Checkpoint bytes failed checksum / structural verification."""
+
+
+class RetriesExhaustedError(ReproError):
+    """``with_retry`` gave up; ``__cause__`` holds the last failure."""
+
+    def __init__(self, site: str, attempts: int, last: BaseException):
+        self.site = site
+        self.attempts = attempts
+        super().__init__(
+            f"{site or 'call'}: gave up after {attempts} attempts: "
+            f"{type(last).__name__}: {last}"
+        )
+        self.__cause__ = last
+
+
+# ------------------------------------------------------------ injected
+class FaultInjectedError(ReproError):
+    """Base for faults raised by the deterministic injector."""
+
+    def __init__(self, site: str, msg: str):
+        self.site = site
+        super().__init__(msg)
+
+
+class InjectedOOMError(FaultInjectedError):
+    """Styled after jaxlib's XlaRuntimeError RESOURCE_EXHAUSTED."""
+
+    def __init__(self, site: str):
+        super().__init__(
+            site,
+            f"RESOURCE_EXHAUSTED: [injected@{site}] Out of memory while "
+            "trying to allocate 9437184000 bytes.",
+        )
+
+
+class InjectedDropError(FaultInjectedError):
+    """A work item was dropped / a read failed (transient)."""
+
+    def __init__(self, site: str):
+        super().__init__(site, f"UNAVAILABLE: [injected@{site}] work item "
+                               "dropped")
+
+
+_TRANSIENT = (
+    InjectedOOMError,
+    InjectedDropError,
+    NonFiniteOutputError,
+    CheckpointCorruptError,
+    OSError,
+)
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Retryability oracle: injected faults, OOMs, I/O errors — not
+    validation/admission errors, not arbitrary bugs."""
+    if isinstance(exc, (ReproValidationError, AdmissionError,
+                        DeadlineExceededError)):
+        return False
+    if isinstance(exc, _TRANSIENT):
+        return True
+    # real XLA OOMs surface as jaxlib.XlaRuntimeError RESOURCE_EXHAUSTED;
+    # match structurally so we need no jaxlib import here
+    if type(exc).__name__ == "XlaRuntimeError":
+        s = str(exc)
+        return "RESOURCE_EXHAUSTED" in s or "UNAVAILABLE" in s
+    return False

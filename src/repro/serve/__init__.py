@@ -1,5 +1,5 @@
 """Serving substrate: batched engine + decode-step factories."""
 from .engine import (
-    ServingEngine, EngineConfig, Request,
+    ServingEngine, EngineConfig, Request, RequestResult,
     make_serve_step, make_prefill, cache_bytes,
 )

@@ -11,6 +11,14 @@ Serving path used by examples/serve_lm.py and the decode dry-run cells:
     EOS + max-token stopping. Finished rows idle until the bucket drains
     (continuous batching slot-swap is a documented extension point — it
     needs per-row cache indices, see DESIGN.md).
+
+Resilience contract (docs/resilience.md): ``submit`` validates prompts and
+enforces bounded admission (``EngineConfig.max_queue``, typed
+``AdmissionError`` + ``serve.rejected`` counter); ``run`` never raises for
+a per-request failure — each bucket is retried under
+``EngineConfig.retry``, failing requests re-run solo, and a request that
+still cannot complete (or overran ``request_timeout_s``) yields a
+``RequestResult`` with ``degraded=True``/``ok=False`` and a typed reason.
 """
 from __future__ import annotations
 
@@ -26,6 +34,14 @@ import numpy as np
 from repro import obs
 from repro.models import model as model_lib
 from repro.models.model import DecodeState
+from repro.resilience import (
+    AdmissionError,
+    NonFiniteOutputError,
+    ReproValidationError,
+    RetryPolicy,
+    faults,
+    with_retry,
+)
 
 
 def make_serve_step(cfg):
@@ -51,6 +67,25 @@ class Request:
     max_new: int = 32
     out: Optional[np.ndarray] = None
     t_submit: float = 0.0         # perf_counter at submit(); queue-wait base
+    deadline: Optional[float] = None   # perf_counter absolute deadline
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Terminal status of one served request.
+
+    Exactly one of three shapes (the engine's completion guarantee):
+    ``ok`` (full generation), ``degraded`` (partial/solo-retried
+    generation, ``reason`` says why), or failed (``ok=False`` with a
+    typed ``reason`` — never an unhandled exception).
+    """
+
+    uid: int
+    tokens: np.ndarray
+    ok: bool = True
+    degraded: bool = False
+    reason: str = ""
+    attempts: int = 1
 
 
 @dataclasses.dataclass
@@ -60,6 +95,14 @@ class EngineConfig:
     temperature: float = 0.0      # 0 = greedy
     eos_id: int = -1              # -1 = never stop on token
     seed: int = 0
+    # --- resilience ---
+    max_queue: int = 256          # bounded admission; 0 = unbounded
+    request_timeout_s: Optional[float] = None
+    retry: RetryPolicy = dataclasses.field(
+        default_factory=lambda: RetryPolicy(max_attempts=3,
+                                            base_delay_s=0.002,
+                                            max_delay_s=0.05)
+    )
 
 
 class ServingEngine:
@@ -69,29 +112,142 @@ class ServingEngine:
         self.ecfg = ecfg
         self.queue: List[Request] = []
         self.done: Dict[int, np.ndarray] = {}
+        self.results: Dict[int, RequestResult] = {}
         self._prefill = jax.jit(make_prefill(cfg, ecfg.max_seq))
         self._step = jax.jit(make_serve_step(cfg))
         self._rng = jax.random.PRNGKey(ecfg.seed)
 
+    # ------------------------------------------------------------- submit
+    def _validate_prompt(self, prompt: np.ndarray) -> np.ndarray:
+        p = np.asarray(prompt)
+        if p.ndim != 1 or len(p) == 0:
+            raise ReproValidationError(
+                f"prompt must be a non-empty 1-D token array; got shape "
+                f"{p.shape}"
+            )
+        if len(p) > self.ecfg.max_seq:
+            raise ReproValidationError(
+                f"prompt length {len(p)} exceeds max_seq "
+                f"{self.ecfg.max_seq}"
+            )
+        if not np.issubdtype(p.dtype, np.integer):
+            if not np.all(np.isfinite(p)) or np.any(p != np.floor(p)):
+                raise ReproValidationError(
+                    "prompt tokens must be integers (got non-finite or "
+                    "fractional values)"
+                )
+        vocab = getattr(self.cfg, "vocab", None)
+        if np.any(p < 0) or (vocab is not None and np.any(p >= vocab)):
+            raise ReproValidationError(
+                f"prompt tokens outside [0, {vocab})"
+            )
+        return p.astype(np.int32)
+
     def submit(self, uid: int, prompt: np.ndarray, max_new: int = 32):
+        """Enqueue a request. Raises ``ReproValidationError`` on malformed
+        input and ``AdmissionError`` when the queue is full."""
+        if max_new <= 0:
+            raise ReproValidationError(f"max_new must be positive: {max_new}")
+        p = self._validate_prompt(prompt)
+        if self.ecfg.max_queue > 0 and len(self.queue) >= self.ecfg.max_queue:
+            obs.counter("serve.rejected").inc()
+            raise AdmissionError(
+                "queue_full",
+                f"admission queue full ({len(self.queue)}/"
+                f"{self.ecfg.max_queue}); retry after run()",
+            )
         obs.counter("serve.requests").inc()
+        now = time.perf_counter()
+        dl = (now + self.ecfg.request_timeout_s
+              if self.ecfg.request_timeout_s else None)
         self.queue.append(
-            Request(uid=uid, prompt=np.asarray(prompt, np.int32),
-                    max_new=max_new, t_submit=time.perf_counter())
+            Request(uid=uid, prompt=p, max_new=max_new, t_submit=now,
+                    deadline=dl)
         )
 
     # ---------------------------------------------------------------- run
     def run(self) -> Dict[int, np.ndarray]:
-        """Serve everything in the queue; returns uid -> generated tokens."""
+        """Serve everything in the queue; returns uid -> generated tokens.
+
+        Completion guarantee: every queued uid appears in the result (and
+        in ``self.results`` with full status) — failed/expired requests
+        map to an empty token array rather than raising.
+        """
         buckets = defaultdict(list)
         for r in self.queue:
             buckets[len(r.prompt)].append(r)
         self.queue.clear()
+        self.results = {}
         for _, reqs in sorted(buckets.items()):
             for i in range(0, len(reqs), self.ecfg.max_batch):
-                self._run_bucket(reqs[i : i + self.ecfg.max_batch])
+                self._serve_bucket(reqs[i : i + self.ecfg.max_batch])
         out, self.done = self.done, {}
         return out
+
+    def run_detailed(self) -> Dict[int, RequestResult]:
+        """Like ``run`` but returns the full per-request status map."""
+        self.run()
+        return self.results
+
+    def _serve_bucket(self, reqs: List[Request]):
+        """Retry-or-degrade wrapper: bucket retried whole, then failing
+        requests re-run solo, and final stragglers are marked failed —
+        this method never raises for per-request faults."""
+        attempts = 1
+
+        def bump(_a, _e, _d):
+            nonlocal attempts
+            attempts += 1
+
+        try:
+            gen = with_retry(
+                lambda: self._run_bucket(reqs),
+                policy=self.ecfg.retry,
+                site="serve.bucket",
+                on_retry=bump,
+            )
+            self._finish(reqs, gen, attempts=attempts,
+                         degraded=attempts > 1,
+                         reason="retried" if attempts > 1 else "")
+            return
+        except Exception as e:  # noqa: BLE001 — degrade path below
+            obs.counter("serve.bucket_failed").inc()
+            last = e
+        if len(reqs) > 1:
+            # degrade: the bucket keeps failing as a batch — serve each
+            # request alone so one poisoned row cannot sink its neighbors
+            for r in reqs:
+                self._serve_bucket([r])
+            for r in reqs:
+                res = self.results[r.uid]
+                if res.ok and not res.degraded:
+                    res.degraded = True
+                    res.reason = "bucket_degraded_to_solo"
+            return
+        r = reqs[0]
+        obs.counter("serve.failed").inc()
+        self.results[r.uid] = RequestResult(
+            uid=r.uid, tokens=np.zeros(0, np.int32), ok=False,
+            degraded=True, attempts=attempts,
+            reason=f"{type(last).__name__}: {last}",
+        )
+        self.done[r.uid] = self.results[r.uid].tokens
+
+    def _finish(self, reqs, gen, attempts=1, degraded=False, reason=""):
+        for r_i, r in enumerate(reqs):
+            toks = np.asarray(gen[r_i][: r.max_new], np.int32)
+            timed_out = (r.deadline is not None
+                         and len(toks) < r.max_new
+                         and time.perf_counter() > r.deadline
+                         and (self.ecfg.eos_id < 0
+                              or self.ecfg.eos_id not in toks.tolist()))
+            self.results[r.uid] = RequestResult(
+                uid=r.uid, tokens=toks, ok=True,
+                degraded=degraded or timed_out,
+                attempts=attempts,
+                reason="deadline_truncated" if timed_out else reason,
+            )
+            self.done[r.uid] = toks
 
     def _sample(self, logits) -> jnp.ndarray:
         if self.ecfg.temperature <= 0:
@@ -101,7 +257,18 @@ class ServingEngine:
             k, logits / self.ecfg.temperature, axis=-1
         )
 
-    def _run_bucket(self, reqs: List[Request]):
+    @staticmethod
+    def _check_logits(logits):
+        """Fault-site output validation: poisoned logits must not silently
+        become argmax(NaN)=0 tokens."""
+        host = np.asarray(logits)
+        if not np.isfinite(host).all():
+            raise NonFiniteOutputError("serve: non-finite logits")
+        return host
+
+    def _run_bucket(self, reqs: List[Request]) -> List[List[int]]:
+        """One attempt at a bucket; pure w.r.t. engine state so retries
+        can re-run it from scratch (results land via ``_finish``)."""
         B = len(reqs)
         t_start = time.perf_counter()
         qw = obs.histogram("serve.queue_wait_s")
@@ -111,13 +278,16 @@ class ServingEngine:
         with obs.span("serve.bucket", batch=B, seq=len(reqs[0].prompt)):
             prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
             with obs.span("serve.prefill") as sp:
+                faults.fault_point("serve.prefill")
                 logits, state = self._prefill(self.params, prompts)
+                logits = faults.poison("serve.prefill", logits)
                 jax.block_until_ready(logits)
             obs.histogram("serve.prefill_s").observe(sp.duration_s)
+            self._check_logits(logits[:, -1])
             max_new = max(r.max_new for r in reqs)
             tok = self._sample(logits[:, -1])[:, None]
             active = np.ones(B, bool)
-            gen = [[] for _ in range(B)]
+            gen: List[List[int]] = [[] for _ in range(B)]
             for r_i in range(B):
                 gen[r_i].append(int(tok[r_i, 0]))
             decode_h = obs.histogram("serve.decode_token_s")
@@ -125,14 +295,25 @@ class ServingEngine:
             t_dec0 = time.perf_counter()
             for _ in range(max_new - 1):
                 t0 = time.perf_counter()
+                faults.fault_point("serve.decode")
                 logits, state = self._step(self.params, state, tok)
+                logits = faults.poison("serve.decode", logits)
+                self._check_logits(logits[:, -1])
                 tok = self._sample(logits[:, -1])[:, None]
                 host = np.asarray(tok[:, 0])   # device sync
                 decode_h.observe(time.perf_counter() - t0)
+                now = time.perf_counter()
                 for r_i in range(B):
                     if not active[r_i]:
                         continue
                     if len(gen[r_i]) >= reqs[r_i].max_new:
+                        active[r_i] = False
+                        continue
+                    if (reqs[r_i].deadline is not None
+                            and now > reqs[r_i].deadline):
+                        # per-request timeout: stop generating for this
+                        # row; _finish tags the partial result degraded
+                        obs.counter("serve.deadline_truncated").inc()
                         active[r_i] = False
                         continue
                     t = int(host[r_i])
@@ -146,8 +327,7 @@ class ServingEngine:
             obs.counter("serve.tokens").inc(n_tok)
             if dt_dec > 0:
                 obs.gauge("serve.tokens_per_s").set(n_tok / dt_dec)
-        for r_i, r in enumerate(reqs):
-            self.done[r.uid] = np.asarray(gen[r_i][: r.max_new], np.int32)
+        return gen
 
 
 def cache_bytes(cfg, batch: int, seq: int) -> int:

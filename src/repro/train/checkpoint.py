@@ -13,18 +13,36 @@ Design (single-process container stands in for per-host writers):
     onto 256 chips (or 8 CPU devices in tests) unchanged.
   * ``latest_step`` + atomic rename give crash-consistent resume: a dir is
     visible only after its manifest lands (write-tmp, fsync, rename).
+
+Resilience (docs/resilience.md):
+  * The manifest records a CRC-32 of the array payload; writes are
+    verified by re-reading the landed bytes before the atomic rename and
+    retried (``resilience.retry``) on mismatch — the ``ckpt.write`` fault
+    site corrupts the payload in flight to exercise exactly this path.
+  * ``restore(step=None)`` walks checkpoints newest→oldest and falls back
+    past truncated/bit-flipped/unreadable ones (``resilience.ckpt_fallback``
+    counter), so one bad write never strands a resume.
+  * ``save(..., keep=K)`` prunes to the newest K checkpoints after a
+    successful landing (never before).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import tempfile
 import threading
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.resilience import faults as _faults
+from repro.resilience import retry as _retry
+from repro.resilience.errors import CheckpointCorruptError
 
 
 def _flatten(tree, prefix=""):
@@ -69,37 +87,81 @@ def _encode(arr: np.ndarray) -> np.ndarray:
     return arr
 
 
-def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
-    """Synchronous crash-consistent save of a pytree."""
+_WRITE_POLICY = _retry.RetryPolicy(max_attempts=5, base_delay_s=0.01,
+                                   max_delay_s=0.2)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
+         keep: Optional[int] = None):
+    """Crash-consistent save: serialize, write-verify (CRC), atomic rename.
+
+    The write is retried under ``_WRITE_POLICY`` when the landed bytes
+    fail verification (injected or real corruption); ``keep`` prunes to
+    the newest K checkpoints after this one lands.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
     host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     dtypes = {k: v.dtype.name for k, v in host.items()}
     shapes = {k: list(v.shape) for k, v in host.items()}
-    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
-    try:
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{k.replace("/", "__"): _encode(v)
-                    for k, v in host.items()})
-        manifest = {
-            "step": int(step),
-            "keys": sorted(host),
-            "dtypes": dtypes,
-            "shapes": shapes,
-            "extra": extra or {},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        final = os.path.join(ckpt_dir, f"step_{step:08d}")
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
-    return os.path.join(ckpt_dir, f"step_{step:08d}")
+    buf = io.BytesIO()
+    np.savez(buf, **{k.replace("/", "__"): _encode(v)
+                     for k, v in host.items()})
+    payload = buf.getvalue()
+    checksum = zlib.crc32(payload)
+    manifest = {
+        "step": int(step),
+        "keys": sorted(host),
+        "dtypes": dtypes,
+        "shapes": shapes,
+        "checksum_crc32": checksum,
+        "extra": extra or {},
+    }
+
+    def write_once() -> str:
+        _faults.fault_point("ckpt.write")
+        tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+        try:
+            apath = os.path.join(tmp, "arrays.npz")
+            with open(apath, "wb") as f:
+                # the ckpt.write fault site bit-flips the payload in
+                # flight; the read-back below catches it pre-rename
+                f.write(_faults.corrupt("ckpt.write", payload))
+                f.flush()
+                os.fsync(f.fileno())
+            with open(apath, "rb") as f:
+                landed = zlib.crc32(f.read())
+            if landed != checksum:
+                raise CheckpointCorruptError(
+                    f"step {step}: landed crc {landed:#x} != "
+                    f"{checksum:#x} (write corrupted)"
+                )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            final = os.path.join(ckpt_dir, f"step_{step:08d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            return final
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    final = _retry.with_retry(write_once, policy=_WRITE_POLICY,
+                              site="ckpt.write")
+    if keep is not None:
+        gc_steps(ckpt_dir, keep)
+    return final
+
+
+def gc_steps(ckpt_dir: str, keep: int) -> None:
+    """Prune to the newest ``keep`` checkpoints."""
+    for s in all_steps(ckpt_dir)[:-keep]:
+        shutil.rmtree(
+            os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True
+        )
 
 
 class AsyncCheckpointer:
@@ -120,8 +182,7 @@ class AsyncCheckpointer:
         def write():
             try:
                 snap = _unflatten_into(tree, host)
-                save(self.ckpt_dir, step, snap, extra)
-                self._gc()
+                save(self.ckpt_dir, step, snap, extra, keep=self.keep)
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
 
@@ -135,14 +196,6 @@ class AsyncCheckpointer:
         if self._error is not None:
             e, self._error = self._error, None
             raise e
-
-    def _gc(self):
-        steps = all_steps(self.ckpt_dir)
-        for s in steps[: -self.keep]:
-            shutil.rmtree(
-                os.path.join(self.ckpt_dir, f"step_{s:08d}"),
-                ignore_errors=True,
-            )
 
 
 def all_steps(ckpt_dir: str):
@@ -162,6 +215,50 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def verify(ckpt_dir: str, step: int) -> bool:
+    """Cheap integrity check: manifest parses and the payload CRC matches
+    (checkpoints written before checksums are accepted as-is)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        want = manifest.get("checksum_crc32")
+        if want is None:
+            return True
+        with open(os.path.join(path, "arrays.npz"), "rb") as f:
+            return zlib.crc32(f.read()) == want
+    except (OSError, ValueError):
+        return False
+
+
+def _load_step(path: str, template: Any) -> Tuple[Any, dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    apath = os.path.join(path, "arrays.npz")
+    want = manifest.get("checksum_crc32")
+    if want is not None:
+        with open(apath, "rb") as f:
+            got = zlib.crc32(f.read())
+        if got != want:
+            raise CheckpointCorruptError(
+                f"{path}: payload crc {got:#x} != manifest {want:#x}"
+            )
+    dtypes = manifest.get("dtypes", {})
+    shapes = manifest.get("shapes", {})
+    import ml_dtypes  # noqa: F401 — registers bf16/fp8 numpy dtypes
+
+    with np.load(apath) as z:
+        flat = {}
+        for k in z.files:
+            key = k.replace("__", "/")
+            arr = z[k]
+            want_dt = dtypes.get(key)
+            if want_dt and arr.dtype.name != want_dt:
+                arr = arr.view(np.dtype(want_dt)).reshape(shapes[key])
+            flat[key] = arr
+    return _unflatten_into(template, flat), manifest
+
+
 def restore(
     ckpt_dir: str,
     template: Any,
@@ -169,30 +266,41 @@ def restore(
     shardings: Any = None,
 ) -> Tuple[Any, int, dict]:
     """Restore into ``template``'s structure; optionally place with
-    ``shardings`` (elastic reshard onto the current mesh)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    dtypes = manifest.get("dtypes", {})
-    shapes = manifest.get("shapes", {})
-    import ml_dtypes  # noqa: F401 — registers bf16/fp8 numpy dtypes
+    ``shardings`` (elastic reshard onto the current mesh).
 
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        flat = {}
-        for k in z.files:
-            key = k.replace("__", "/")
-            arr = z[k]
-            want = dtypes.get(key)
-            if want and arr.dtype.name != want:
-                arr = arr.view(np.dtype(want)).reshape(shapes[key])
-            flat[key] = arr
-    tree = _unflatten_into(template, flat)
-    if shardings is not None:
-        tree = jax.tree.map(
-            lambda a, s: jax.device_put(a, s), tree, shardings
-        )
-    return tree, step, manifest.get("extra", {})
+    With ``step=None``, walks checkpoints newest→oldest and skips
+    corrupt/unreadable ones (``resilience.ckpt_fallback`` counts each
+    skip); an explicit ``step`` is loaded strictly and raises
+    ``CheckpointCorruptError`` on damage.
+    """
+    if step is not None:
+        candidates = [step]
+        strict = True
+    else:
+        candidates = list(reversed(all_steps(ckpt_dir)))
+        strict = False
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    last_err: Optional[BaseException] = None
+    for s in candidates:
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            tree, manifest = _load_step(path, template)
+        except (CheckpointCorruptError, OSError, ValueError, KeyError,
+                zlib.error) as e:
+            if strict:
+                if isinstance(e, CheckpointCorruptError):
+                    raise
+                raise CheckpointCorruptError(f"{path}: {e}") from e
+            obs_metrics.counter("resilience.ckpt_fallback").inc()
+            last_err = e
+            continue
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, sh: jax.device_put(a, sh), tree, shardings
+            )
+        return tree, s, manifest.get("extra", {})
+    raise CheckpointCorruptError(
+        f"no valid checkpoint in {ckpt_dir} "
+        f"(tried {len(candidates)}; last: {last_err})"
+    )

@@ -30,10 +30,13 @@ def rng():
 
 @pytest.fixture(autouse=True)
 def _reset_obs():
-    """Fresh global tracer + metrics registry per test (obs state is
-    process-global by design; tests must not see each other's spans)."""
+    """Fresh global tracer + metrics registry + fault injector per test
+    (all three are process-global by design; tests must not see each
+    other's spans, counters, or per-site fault counters)."""
     yield
     from repro.obs import metrics, trace
+    from repro.resilience import faults
 
     trace.reset()
     metrics.reset()
+    faults.reset()
