@@ -159,6 +159,56 @@ def resilience_table(chaos_rows: List[dict], metrics: dict) -> str:
     return "\n".join(lines)
 
 
+def serving_table(serve_rows: List[dict]) -> str:
+    """Markdown serving section: continuous-batching vs bucketed engine
+    (results/bench/results.json "serve" rows, from ``run.py --only
+    serve``)."""
+    lines = [
+        "| engine | req | tokens | tok/s (wall) | tok/s (decode) | "
+        "slot idle | mean wait ms | p95 wait ms | greedy == oracle |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    by_bench = {}
+    for r in serve_rows:
+        by_bench[r.get("bench")] = r
+        lines.append(
+            f"| {r.get('bench', '?')} | {r.get('n_requests', 0)} | "
+            f"{r.get('n_tokens', 0)} | {r.get('tokens_per_s', 0):.1f} | "
+            f"{r.get('decode_tokens_per_s', 0):.1f} | "
+            f"{r.get('slot_idle_frac', 0):.3f} | "
+            f"{r.get('mean_queue_wait_s', 0) * 1e3:.1f} | "
+            f"{r.get('p95_queue_wait_s', 0) * 1e3:.1f} | "
+            f"{'Y' if r.get('identical_greedy') else 'N'} |"
+        )
+    bkt = by_bench.get("serve_bucketed")
+    con = by_bench.get("serve_continuous")
+    if bkt and con:
+        lines.append(
+            f"\nSlot idle fraction {bkt['slot_idle_frac']:.3f} → "
+            f"{con['slot_idle_frac']:.3f}; slot-swap reclaims the decode "
+            "steps the bucketed engine burns on finished rows "
+            "(docs/serving.md)."
+        )
+    return "\n".join(lines)
+
+
+def check_serve_section(results: dict) -> List[dict]:
+    """The bucketed-vs-continuous comparison is an acceptance artifact:
+    if the benchmark results exist but the serve section is missing or
+    one-sided, fail loudly instead of silently emitting a report without
+    it."""
+    serve_rows = results.get("serve", [])
+    benches = {r.get("bench") for r in serve_rows}
+    missing = {"serve_bucketed", "serve_continuous"} - benches
+    if missing:
+        raise SystemExit(
+            "make_report: serving comparison has no data for "
+            f"{sorted(missing)} — run `PYTHONPATH=src python -m "
+            "benchmarks.run --only serve` (or a full run) first"
+        )
+    return serve_rows
+
+
 def summarize(rows):
     ok = sum(1 for r in rows if r.get("ok") and not r.get("skipped"))
     skip = sum(1 for r in rows if r.get("skipped"))
@@ -197,9 +247,11 @@ def main():
     met_p = "results/bench/metrics.json"
     chaos_rows = []
     met = {}
+    bench_results = None
     if os.path.exists(res_p):
         with open(res_p) as f:
-            chaos_rows = json.load(f).get("chaos", [])
+            bench_results = json.load(f)
+        chaos_rows = bench_results.get("chaos", [])
     if os.path.exists(met_p):
         with open(met_p) as f:
             met = json.load(f)
@@ -208,6 +260,11 @@ def main():
         print("\n### Resilience — chaos benchmark "
               "(`run.py --chaos`, docs/resilience.md)\n")
         print(resilience_table(chaos_rows, met))
+    if bench_results is not None:
+        serve_rows = check_serve_section(bench_results)
+        print("\n### Serving — continuous batching vs bucketed "
+              "(`run.py --only serve`, docs/serving.md)\n")
+        print(serving_table(serve_rows))
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ Sections:
   coloring   critical path / scheduling study (Fig. 12)
   kernel     Pallas tile-kernel structural benchmark
   roofline   roofline table from dry-run artifacts (§Roofline)
+  serve      continuous-batching vs bucketed serving engine
 
 Output: ``name,us_per_call,derived`` CSV lines to stdout + JSON to
 results/bench/.
@@ -31,7 +32,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-SECTIONS = ("table3", "parallel", "ddover", "coloring", "kernel", "roofline")
+SECTIONS = ("table3", "parallel", "ddover", "coloring", "kernel",
+            "roofline", "serve")
 
 
 def main() -> None:
@@ -84,6 +86,10 @@ def main() -> None:
             all_results["roofline"] = bench_roofline.run()
         else:
             print("  (no dry-run artifacts; run repro.launch.dryrun first)")
+    if "serve" in args.only:
+        print("== serve: continuous vs bucketed engine ==")
+        from benchmarks import bench_serve
+        all_results["serve"] = bench_serve.run(quick=args.quick)
 
     if args.chaos:
         print("== chaos: fault-injection recovery overhead (8 devices) ==")
@@ -121,7 +127,8 @@ def main() -> None:
                        or r.get("bottleneck") or r.get("mxu_fill")
                        or r.get("replication_factor")
                        or r.get("tinf_sched_pct")
-                       or r.get("recovery_overhead_pct") or "")
+                       or r.get("recovery_overhead_pct")
+                       or r.get("tokens_per_s") or "")
             print(f"{section}:{name},{'' if t is None else round(t, 1)},"
                   f"{derived}")
 

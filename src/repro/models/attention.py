@@ -173,8 +173,16 @@ def attn_decode(
     x: jnp.ndarray,                     # (B, 1, D)
     cache: KVCache,
     use_rope: bool = True,
+    positions: Optional[jnp.ndarray] = None,   # (B,) per-row cursors
 ) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode against a dense KV cache."""
+    """One-token decode against a dense KV cache.
+
+    With ``positions=None`` every row writes/reads at the shared scalar
+    ``cache.index`` cursor (bucketed serving, all rows in lockstep). With
+    ``positions`` of shape (B,) each row keeps its own sequence position —
+    the continuous-batching slot-swap mode, where rows at different depths
+    share one cache pool and ``cache.index`` is ignored.
+    """
     dt = x.dtype
     B, _, D = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -183,15 +191,24 @@ def attn_decode(
     k_new = _split_heads(x @ p["wk"].astype(dt), Hkv, dh)
     v_new = _split_heads(x @ p["wv"].astype(dt), Hkv, dh)
     if use_rope:
-        pos = idx[None, None]
+        pos = idx[None, None] if positions is None else positions[:, None]
         q = layers.apply_rope(q, pos, cfg.rope_theta)
         k_new = layers.apply_rope(k_new, pos, cfg.rope_theta)
-    k_cache = jax.lax.dynamic_update_slice(
-        cache.k, k_new.astype(cache.k.dtype), (0, idx, 0, 0)
-    )
-    v_cache = jax.lax.dynamic_update_slice(
-        cache.v, v_new.astype(cache.v.dtype), (0, idx, 0, 0)
-    )
+    if positions is None:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, idx, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, idx, 0, 0)
+        )
+    else:
+        rows = jnp.arange(B)
+        k_cache = cache.k.at[rows, positions].set(
+            k_new[:, 0].astype(cache.k.dtype), mode="drop"
+        )
+        v_cache = cache.v.at[rows, positions].set(
+            v_new[:, 0].astype(cache.v.dtype), mode="drop"
+        )
     kv_pos = jnp.arange(cache.k.shape[1])
     # Flash-decoding layout (§Perf iteration 2): replicate the tiny q over
     # "model" and keep the cache (and thus the score panel) sequence-sharded
@@ -204,10 +221,16 @@ def attn_decode(
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
     s = _shard.hint(s, "batch", None, None, "seq")
     s = s.astype(jnp.float32)
-    valid = kv_pos <= idx
-    if cfg.sliding_window > 0:
-        valid &= idx - kv_pos < cfg.sliding_window
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    if positions is None:
+        valid = kv_pos <= idx
+        if cfg.sliding_window > 0:
+            valid &= idx - kv_pos < cfg.sliding_window
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+    else:
+        valid = kv_pos[None, :] <= positions[:, None]          # (B, S)
+        if cfg.sliding_window > 0:
+            valid &= positions[:, None] - kv_pos[None, :] < cfg.sliding_window
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
     probs = jax.nn.softmax(s, axis=-1).astype(dt)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
     out = out.reshape(B, 1, H * dh) @ p["wo"].astype(dt)

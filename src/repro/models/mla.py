@@ -43,11 +43,13 @@ def mla_init(key, cfg) -> dict:
 
 
 def _project_q(cfg, p, x, positions):
+    """positions: (S,) shared across the batch, or (B, S) per-row."""
     B, S, _ = x.shape
     H, dn, dr = cfg.n_heads, cfg.qk_nope_dims, cfg.qk_rope_dims
     q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = layers.apply_rope(q_rope, positions[None], cfg.rope_theta)
+    pos = positions if positions.ndim == 2 else positions[None]
+    q_rope = layers.apply_rope(q_rope, pos, cfg.rope_theta)
     return q_nope, q_rope
 
 
@@ -89,27 +91,42 @@ def init_cache(cfg, batch: int, max_seq: int, dtype) -> MLACache:
     )
 
 
-def mla_decode(cfg, p, x, cache: MLACache) -> Tuple[jnp.ndarray, MLACache]:
-    """Absorbed-matrix decode: scores and values in latent space."""
+def mla_decode(cfg, p, x, cache: MLACache,
+               positions=None) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed-matrix decode: scores and values in latent space.
+
+    ``positions`` (B,) switches to per-row cursors (continuous batching);
+    the scalar ``cache.index`` cursor is used — and advanced — otherwise.
+    """
     dt = x.dtype
     B = x.shape[0]
     H = cfg.n_heads
     dn, dr, dv, r = (cfg.qk_nope_dims, cfg.qk_rope_dims, cfg.v_head_dim,
                      cfg.kv_lora)
     idx = cache.index
-    pos = idx[None, None]
-    q_nope, q_rope = _project_q(cfg, p, x, pos[0])
+    pos = idx[None, None] if positions is None else positions[:, None]
+    q_nope, q_rope = _project_q(cfg, p, x, pos if positions is not None
+                                else pos[0])
     c_new = layers.rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"],
                             cfg.norm_eps)
     kr_new = layers.apply_rope(
         (x @ p["w_krope"].astype(dt))[:, :, None, :], pos, cfg.rope_theta
     )[:, :, 0, :]
-    c_kv = jax.lax.dynamic_update_slice(
-        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, idx, 0)
-    )
-    k_rope = jax.lax.dynamic_update_slice(
-        cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, idx, 0)
-    )
+    if positions is None:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, idx, 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache.k_rope, kr_new.astype(cache.k_rope.dtype), (0, idx, 0)
+        )
+    else:
+        rows = jnp.arange(B)
+        c_kv = cache.c_kv.at[rows, positions].set(
+            c_new[:, 0].astype(cache.c_kv.dtype), mode="drop"
+        )
+        k_rope = cache.k_rope.at[rows, positions].set(
+            kr_new[:, 0].astype(cache.k_rope.dtype), mode="drop"
+        )
     # absorb w_uk into the query:  q_lat[h, r] = q_nope[h, dn] @ w_uk[r, h, dn]
     w_uk = p["w_uk"].astype(dt).reshape(r, H, dn)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)    # (B,1,H,r)
@@ -123,8 +140,12 @@ def mla_decode(cfg, p, x, cache: MLACache) -> Tuple[jnp.ndarray, MLACache]:
     ) * scale
     s = _shard.hint(s, "batch", None, None, "seq")
     s = s.astype(jnp.float32)
-    valid = jnp.arange(c_kv.shape[1]) <= idx
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    kv_pos = jnp.arange(c_kv.shape[1])
+    if positions is None:
+        s = jnp.where((kv_pos <= idx)[None, None, None, :], s, -1e30)
+    else:
+        valid = kv_pos[None, :] <= positions[:, None]          # (B, S)
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
     probs = jax.nn.softmax(s, -1).astype(dt)
     ctx = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv.astype(dt))  # latent ctx
     w_uv = p["w_uv"].astype(dt).reshape(r, H, dv)

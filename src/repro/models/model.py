@@ -19,7 +19,9 @@ class DecodeState(NamedTuple):
     layer: Any                 # stacked per-layer cache pytree
     shared: Any                # (n_sites, ...) KVCache stack (zamba2) or None
     cross: Any                 # (enc_out, stacked cross-KV) (whisper) or None
-    step: jnp.ndarray          # scalar int32 — tokens decoded so far
+    step: jnp.ndarray          # int32 sequence cursor: scalar (all rows in
+    #                            lockstep) or (B,) per-row (slot-swap
+    #                            continuous batching — see serve/engine.py)
 
 
 # ------------------------------------------------------------ cache builders
@@ -43,7 +45,11 @@ def _stack(n, tree):
 
 
 def init_decode_state(cfg, batch: int, max_seq: int,
-                      dtype=jnp.bfloat16) -> DecodeState:
+                      dtype=jnp.bfloat16,
+                      per_row: bool = False) -> DecodeState:
+    """Fresh decode cache pool. ``per_row=True`` makes ``step`` a (B,)
+    vector so every row keeps its own sequence position (slot-swap
+    serving); per-layer scalar ``index`` cursors are then ignored."""
     layer = _stack(cfg.n_layers, _layer_cache(cfg, batch, max_seq, dtype))
     shared = None
     if cfg.shared_attn_every > 0:
@@ -60,17 +66,22 @@ def init_decode_state(cfg, batch: int, max_seq: int,
             jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Hkv, dh), dt),  # K
             jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, Hkv, dh), dt),  # V
         )
-    return DecodeState(layer=layer, shared=shared, cross=cross,
-                       step=jnp.zeros((), jnp.int32))
+    step = (jnp.zeros((batch,), jnp.int32) if per_row
+            else jnp.zeros((), jnp.int32))
+    return DecodeState(layer=layer, shared=shared, cross=cross, step=step)
 
 
 # ----------------------------------------------------------------- decode
-def _mixer_decode(cfg, bp, x, cache):
+def _mixer_decode(cfg, bp, x, cache, positions=None):
     if cfg.mixer == "attn":
         if cfg.mla:
-            return mla.mla_decode(cfg, bp["mla"], x, cache)
+            return mla.mla_decode(cfg, bp["mla"], x, cache,
+                                  positions=positions)
         return attention.attn_decode(cfg, bp["attn"], x, cache,
-                                     use_rope=cfg.use_rope)
+                                     use_rope=cfg.use_rope,
+                                     positions=positions)
+    # recurrent mixers carry per-row state and no positional math — the
+    # same decode serves lockstep and per-row cursors
     if cfg.mixer == "mamba2":
         return ssm.ssm_decode(cfg, bp["ssm"], x, cache)
     if cfg.mixer == "rwkv6":
@@ -108,12 +119,17 @@ def decode_step(cfg, params, token: jnp.ndarray,
     """One decode step. token: (B, 1) int32 (or (B, 1, D) embeds for vlm
     image-free steps are not needed: decode always consumes token ids)."""
     dt = jnp.dtype(cfg.compute_dtype)
+    per_row = state.step.ndim == 1
+    positions = state.step if per_row else None
     x = params["embed"]["tok"].astype(dt)[token]            # (B,1,D)
     if cfg.enc_dec:
         pos_emb = layers.sinusoidal_positions(cfg.max_seq, cfg.d_model)
-        x = x + jax.lax.dynamic_slice_in_dim(
-            pos_emb, state.step, 1, axis=0
-        ).astype(dt)[None]
+        if per_row:
+            x = x + pos_emb[state.step][:, None].astype(dt)
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                pos_emb, state.step, 1, axis=0
+            ).astype(dt)[None]
 
     L = cfg.n_layers
     flags = None
@@ -135,7 +151,8 @@ def decode_step(cfg, params, token: jnp.ndarray,
         if dense_mlp is not None:
             bp = dict(bp, dense_mlp=dense_mlp)
         h = layers.apply_norm(cfg, x, bp["norm1"])
-        h, cache_mix = _mixer_decode(cfg, bp, h, _mix_cache(cfg, cache_l))
+        h, cache_mix = _mixer_decode(cfg, bp, h, _mix_cache(cfg, cache_l),
+                                     positions)
         x = x + h
         if flags is not None:
             scfg = cfg.replace(mixer="attn")
@@ -143,12 +160,13 @@ def decode_step(cfg, params, token: jnp.ndarray,
             def with_attn(op):
                 x, sc = op
                 cache_s = jax.tree.map(lambda a: a[site], sc)
-                # all sites share the same write index = step
-                cache_s = cache_s._replace(index=state.step)
+                if not per_row:
+                    # all sites share the same write index = step
+                    cache_s = cache_s._replace(index=state.step)
                 h2, cache_s = attention.attn_decode(
                     scfg, params["shared_attn"],
                     layers.apply_norm(cfg, x, params["shared_norm"]),
-                    cache_s, use_rope=cfg.use_rope,
+                    cache_s, use_rope=cfg.use_rope, positions=positions,
                 )
                 sc = jax.tree.map(
                     lambda full, new: jax.lax.dynamic_update_index_in_dim(
@@ -216,13 +234,47 @@ def _merge_cache(cfg, old, after_mix, after_channel):
 
 
 # ----------------------------------------------------------------- prefill
+def write_slot(cfg, pool: DecodeState, fresh: DecodeState,
+               slot) -> DecodeState:
+    """Scatter a batch-1 decode state into row ``slot`` of a per-row pool.
+
+    The slot-swap primitive of continuous batching: the entire cache row
+    (K/V lines, recurrent state, conv buffers) is overwritten, so whatever
+    a previous occupant left behind is gone, and ``pool.step[slot]`` is
+    set to the new request's prompt length. Per-layer scalar ``index``
+    cursors (rank < 2 leaves) are batch-free and stay untouched — the
+    per-row ``step`` vector is the only cursor per-row decode reads.
+    """
+    if pool.cross is not None:
+        raise NotImplementedError(
+            "slot-swap prefill does not support encoder-decoder states"
+        )
+
+    def _row(p, f):
+        if p.ndim < 2:                       # (L,)/(n_sites,) index cursors
+            return p
+        return jax.lax.dynamic_update_index_in_dim(
+            p, jax.lax.squeeze(f, (1,)), slot, 1
+        )
+
+    layer = jax.tree.map(_row, pool.layer, fresh.layer)
+    shared = (jax.tree.map(_row, pool.shared, fresh.shared)
+              if pool.shared is not None else None)
+    step = pool.step.at[slot].set(fresh.step.astype(pool.step.dtype))
+    return DecodeState(layer=layer, shared=shared, cross=None, step=step)
+
+
 def prefill(cfg, params, tokens, max_seq: int,
-            vision_embeds=None, audio_frames=None
+            vision_embeds=None, audio_frames=None,
+            state: Optional[DecodeState] = None, slot=None,
             ) -> Tuple[jnp.ndarray, DecodeState]:
     """Run the full prompt, returning last-position logits + decode state.
 
     Attention caches are filled with the prompt's K/V; recurrent mixers keep
-    their end-of-prompt state. (Serving engines call this once per request.)
+    their end-of-prompt state. Bucketed serving calls this once per batch;
+    with ``state``/``slot`` given, ``tokens`` must be (1, S) and the fresh
+    request state is scattered into row ``slot`` of the existing per-row
+    ``state`` pool (mid-decode slot swap), returning the updated pool.
     """
     dt = jnp.dtype(cfg.compute_dtype)
     B = tokens.shape[0]
@@ -231,7 +283,7 @@ def prefill(cfg, params, tokens, max_seq: int,
         x = jnp.concatenate([vision_embeds.astype(dt), x], axis=1)
     S = x.shape[1]
     positions = jnp.arange(S)
-    state = init_decode_state(cfg, B, max_seq, dt)
+    init_state = init_decode_state(cfg, B, max_seq, dt)
     enc_out = None
     cross = None
     if cfg.enc_dec:
@@ -344,14 +396,19 @@ def prefill(cfg, params, tokens, max_seq: int,
             h2, _ = transformer._apply_channel(cfg, bp, h_in2, li)
         return (x + h2, shared_caches), new_cache
 
-    xs = [params["blocks"], state.layer, jnp.arange(L)]
+    xs = [params["blocks"], init_state.layer, jnp.arange(L)]
     if flags is not None:
         xs += [flags, site_idx]
     (x, shared_new), layer_new = jax.lax.scan(
-        body, (x, state.shared), tuple(xs))
+        body, (x, init_state.shared), tuple(xs))
     x = layers.apply_norm(cfg, x, params["final_norm"])
     logits = layers.logits_from_hidden(cfg, params, x[:, -1:])
-    return logits, DecodeState(
+    fresh = DecodeState(
         layer=layer_new, shared=shared_new, cross=cross,
         step=jnp.asarray(S, jnp.int32),
     )
+    if state is None:
+        return logits, fresh
+    if B != 1:
+        raise ValueError(f"slot prefill expects a (1, S) prompt; got B={B}")
+    return logits, write_slot(cfg, state, fresh, slot)

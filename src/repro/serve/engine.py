@@ -1,30 +1,54 @@
-"""Batched serving engine: bucketed prefill + masked decode.
+"""Batched serving engine: continuous batching (slot-swap decode) with a
+bucketed reference path.
 
 Serving path used by examples/serve_lm.py and the decode dry-run cells:
 
   * ``make_serve_step(cfg)``   — the pure (params, state, token) -> (logits,
     state) decode function the dry-run lowers (one new token against a
     seq_len KV cache; the ``decode_*`` / ``long_*`` shape cells).
-  * ``ServingEngine``          — groups queued requests into same-length
-    buckets (no padding-token infidelity), prefills each bucket as a batch,
-    then decodes with a per-row active mask, greedy or temperature sampling,
-    EOS + max-token stopping. Finished rows idle until the bucket drains
-    (continuous batching slot-swap is a documented extension point — it
-    needs per-row cache indices, see DESIGN.md).
+  * ``ServingEngine``          — with ``EngineConfig.continuous_batching``
+    (the default) the engine runs a fixed pool of ``max_batch`` decode
+    slots with per-row KV-cache positions (``DecodeState.step`` as a (B,)
+    vector): a row that hits EOS / ``max_new`` / its deadline is swapped
+    out immediately and the next queued request is prefilled into the
+    freed slot *mid-decode* (``models.model.prefill(..., state=, slot=)``),
+    so no slot idles while work is queued — the same no-straggler
+    scheduling argument the paper makes for spatio-temporal tiles.
+    ``continuous_batching=False`` keeps the bucketed reference oracle:
+    same-length buckets, lockstep decode, finished rows idle until the
+    bucket drains. Greedy decode is token-identical across the two paths
+    (per-row masks make every row's math independent of its neighbors),
+    which is what the continuous-batching tests assert.
+
+Scheduler loop (continuous path; docs/serving.md has the diagram)::
+
+    while queued or occupied:
+        retire rows at EOS / max_new / deadline   -> RequestResult
+        prefill queued requests into free slots   (serve.swap_s)
+        one masked decode step over the pool      (serve.decode_token_s)
 
 Resilience contract (docs/resilience.md): ``submit`` validates prompts and
 enforces bounded admission (``EngineConfig.max_queue``, typed
 ``AdmissionError`` + ``serve.rejected`` counter); ``run`` never raises for
-a per-request failure — each bucket is retried under
-``EngineConfig.retry``, failing requests re-run solo, and a request that
-still cannot complete (or overran ``request_timeout_s``) yields a
-``RequestResult`` with ``degraded=True``/``ok=False`` and a typed reason.
+a per-request failure. In the continuous path the retry/degrade unit is
+per-slot: a failing slot prefill is retried under ``EngineConfig.retry``
+and then fails only that request; a failing decode step is retried in
+place and, when exhausted, fails only the rows occupied at that moment —
+the pool keeps serving the rest of the queue. Every admitted uid ends in
+a terminal ``RequestResult`` (ok / degraded / typed failure). Sampling
+keys derive from ``jax.random.fold_in(base_key, uid)`` then the per-token
+position, so retries and solo-degrade reruns resample identical tokens.
+
+Observability: ``serve.queue_wait_s`` (observed exactly once per request,
+at first service attempt), ``serve.swap_s``, ``serve.slot_occupancy``,
+``serve.slot_idle_frac``, ``serve.tokens_per_s`` (wall clock, swaps
+included) and ``serve.decode_tokens_per_s`` (decode-step time only).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
+from collections import defaultdict, deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -68,6 +92,7 @@ class Request:
     out: Optional[np.ndarray] = None
     t_submit: float = 0.0         # perf_counter at submit(); queue-wait base
     deadline: Optional[float] = None   # perf_counter absolute deadline
+    qw_seen: bool = False         # queue wait observed (once per request)
 
 
 @dataclasses.dataclass
@@ -75,9 +100,9 @@ class RequestResult:
     """Terminal status of one served request.
 
     Exactly one of three shapes (the engine's completion guarantee):
-    ``ok`` (full generation), ``degraded`` (partial/solo-retried
-    generation, ``reason`` says why), or failed (``ok=False`` with a
-    typed ``reason`` — never an unhandled exception).
+    ``ok`` (full generation), ``degraded`` (partial/retried generation,
+    ``reason`` says why), or failed (``ok=False`` with a typed ``reason``
+    — never an unhandled exception).
     """
 
     uid: int
@@ -95,9 +120,10 @@ class EngineConfig:
     temperature: float = 0.0      # 0 = greedy
     eos_id: int = -1              # -1 = never stop on token
     seed: int = 0
+    continuous_batching: bool = True   # slot-swap decode; False = bucketed
     # --- resilience ---
     max_queue: int = 256          # bounded admission; 0 = unbounded
-    request_timeout_s: Optional[float] = None
+    request_timeout_s: Optional[float] = None   # 0 = expire immediately
     retry: RetryPolicy = dataclasses.field(
         default_factory=lambda: RetryPolicy(max_attempts=3,
                                             base_delay_s=0.002,
@@ -105,17 +131,63 @@ class EngineConfig:
     )
 
 
+def _blank_stats(mode: str) -> Dict:
+    return {
+        "mode": mode,
+        "wall_s": 0.0,
+        "decode_s": 0.0,
+        "n_tokens": 0,
+        "decode_steps": 0,
+        "slot_steps": 0,          # decode_steps * pool width
+        "active_slot_steps": 0,   # slot-steps that produced a kept token
+        "swaps": 0,
+        "queue_wait_s": [],
+    }
+
+
 class ServingEngine:
     def __init__(self, cfg, params, ecfg: EngineConfig):
+        if ecfg.request_timeout_s is not None and ecfg.request_timeout_s < 0:
+            raise ReproValidationError(
+                f"request_timeout_s must be >= 0 or None: "
+                f"{ecfg.request_timeout_s}"
+            )
+        if ecfg.max_batch < 1:
+            raise ReproValidationError(
+                f"max_batch must be >= 1: {ecfg.max_batch}"
+            )
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.queue: List[Request] = []
         self.done: Dict[int, np.ndarray] = {}
         self.results: Dict[int, RequestResult] = {}
+        self.last_stats: Dict = _blank_stats("idle")
         self._prefill = jax.jit(make_prefill(cfg, ecfg.max_seq))
+        self._prefill_slot = jax.jit(
+            lambda params, tokens, state, slot: model_lib.prefill(
+                cfg, params, tokens, max_seq=ecfg.max_seq,
+                state=state, slot=slot,
+            )
+        )
         self._step = jax.jit(make_serve_step(cfg))
-        self._rng = jax.random.PRNGKey(ecfg.seed)
+        self._base_key = jax.random.PRNGKey(ecfg.seed)
+        if ecfg.temperature > 0:
+            base, temp = self._base_key, ecfg.temperature
+
+            def sampler(logits, uids, counts):
+                def one(row_logits, uid, count):
+                    k = jax.random.fold_in(
+                        jax.random.fold_in(base, uid), count)
+                    return jax.random.categorical(k, row_logits / temp)
+
+                return jax.vmap(one)(logits, uids, counts)
+
+            self._sample_fn = jax.jit(sampler)
+        # continuous batching needs decoder-only states (slot-swap has no
+        # per-row encoder output scatter); whisper-style archs fall back
+        self._continuous = (ecfg.continuous_batching
+                            and not getattr(cfg, "enc_dec", False))
 
     # ------------------------------------------------------------- submit
     def _validate_prompt(self, prompt: np.ndarray) -> np.ndarray:
@@ -158,8 +230,10 @@ class ServingEngine:
             )
         obs.counter("serve.requests").inc()
         now = time.perf_counter()
+        # timeout 0 means "expire immediately", not "no timeout" — only
+        # None disables the deadline
         dl = (now + self.ecfg.request_timeout_s
-              if self.ecfg.request_timeout_s else None)
+              if self.ecfg.request_timeout_s is not None else None)
         self.queue.append(
             Request(uid=uid, prompt=p, max_new=max_new, t_submit=now,
                     deadline=dl)
@@ -173,14 +247,32 @@ class ServingEngine:
         in ``self.results`` with full status) — failed/expired requests
         map to an empty token array rather than raising.
         """
-        buckets = defaultdict(list)
-        for r in self.queue:
-            buckets[len(r.prompt)].append(r)
-        self.queue.clear()
+        reqs, self.queue = self.queue, []
         self.results = {}
-        for _, reqs in sorted(buckets.items()):
-            for i in range(0, len(reqs), self.ecfg.max_batch):
-                self._serve_bucket(reqs[i : i + self.ecfg.max_batch])
+        self.last_stats = _blank_stats(
+            "continuous" if self._continuous else "bucketed")
+        t0 = time.perf_counter()
+        if self._continuous:
+            self._run_continuous(reqs)
+        else:
+            buckets = defaultdict(list)
+            for r in reqs:
+                buckets[len(r.prompt)].append(r)
+            for _, bucket in sorted(buckets.items()):
+                for i in range(0, len(bucket), self.ecfg.max_batch):
+                    self._serve_bucket(bucket[i : i + self.ecfg.max_batch])
+        st = self.last_stats
+        st["wall_s"] = time.perf_counter() - t0
+        if st["slot_steps"]:
+            obs.gauge("serve.slot_idle_frac").set(
+                1.0 - st["active_slot_steps"] / st["slot_steps"])
+        if st["wall_s"] > 0:
+            obs.gauge("serve.tokens_per_s").set(
+                st["n_tokens"] / st["wall_s"])
+        if st["decode_s"] > 0:
+            obs.gauge("serve.decode_tokens_per_s").set(
+                st["n_tokens"] / st["decode_s"])
+        obs.counter("serve.tokens").inc(st["n_tokens"])
         out, self.done = self.done, {}
         return out
 
@@ -189,6 +281,220 @@ class ServingEngine:
         self.run()
         return self.results
 
+    # --------------------------------------------------------- shared bits
+    def _observe_queue_wait(self, r: Request) -> None:
+        """Queue wait is observed exactly once per request, at its first
+        service attempt — retries and solo-degrade reruns must not
+        re-observe it (they would inflate p95/p99 under fault injection)."""
+        if r.qw_seen or r.t_submit <= 0:
+            return
+        r.qw_seen = True
+        w = max(time.perf_counter() - r.t_submit, 0.0)
+        obs.histogram("serve.queue_wait_s").observe(w)
+        self.last_stats["queue_wait_s"].append(w)
+
+    def _sample(self, logits, uids, counts) -> jnp.ndarray:
+        """Per-request sampling: row i's key is fold_in(fold_in(base,
+        uid_i), count_i), a pure function of (seed, uid, position) — no
+        engine-level RNG stream, so fault-history cannot shift tokens."""
+        if self.ecfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        return self._sample_fn(
+            logits,
+            jnp.asarray(np.asarray(uids, np.uint32)),
+            jnp.asarray(np.asarray(counts, np.uint32)),
+        )
+
+    @staticmethod
+    def _check_logits(logits):
+        """Fault-site output validation: poisoned logits must not silently
+        become argmax(NaN)=0 tokens."""
+        host = np.asarray(logits)
+        if not np.isfinite(host).all():
+            raise NonFiniteOutputError("serve: non-finite logits")
+        return host
+
+    def _fail(self, r: Request, exc: BaseException, attempts: int,
+              tokens: Optional[List[int]] = None) -> None:
+        obs.counter("serve.failed").inc()
+        toks = np.asarray(tokens or [], np.int32)
+        self.results[r.uid] = RequestResult(
+            uid=r.uid, tokens=toks, ok=False, degraded=True,
+            attempts=attempts, reason=f"{type(exc).__name__}: {exc}",
+        )
+        self.done[r.uid] = toks
+
+    # ------------------------------------------------- continuous batching
+    def _run_continuous(self, reqs: List[Request]) -> None:
+        """Slot-swap scheduler: fixed pool of ``max_batch`` decode slots,
+        per-row cache positions, mid-decode prefill into freed slots."""
+        B = self.ecfg.max_batch
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        state = model_lib.init_decode_state(
+            self.cfg, B, self.ecfg.max_seq, dt, per_row=True)
+        pending = deque(reqs)
+        slots: List[Optional[Request]] = [None] * B
+        gen: List[List[int]] = [[] for _ in range(B)]
+        attempts = [1] * B
+        retried = [False] * B
+        last_tok = np.zeros(B, np.int32)
+        uids = np.zeros(B, np.int64)
+        st = self.last_stats
+        decode_h = obs.histogram("serve.decode_token_s")
+        swap_h = obs.histogram("serve.swap_s")
+        eos = self.ecfg.eos_id
+
+        def occupied() -> List[int]:
+            return [i for i in range(B) if slots[i] is not None]
+
+        def retire(i: int, ok: bool = True, reason: str = "",
+                   exc: Optional[BaseException] = None) -> None:
+            r = slots[i]
+            slots[i] = None
+            toks = gen[i][: r.max_new]
+            gen[i] = []
+            if not ok:
+                self._fail(r, exc, attempts[i], tokens=toks)
+                return
+            degraded = bool(reason) or retried[i]
+            self.results[r.uid] = RequestResult(
+                uid=r.uid, tokens=np.asarray(toks, np.int32), ok=True,
+                degraded=degraded, attempts=attempts[i],
+                reason=reason or ("retried" if retried[i] else ""),
+            )
+            self.done[r.uid] = self.results[r.uid].tokens
+
+        def retire_finished() -> None:
+            now = time.perf_counter()
+            for i in occupied():
+                r = slots[i]
+                if len(gen[i]) >= r.max_new:
+                    retire(i)
+                elif (r.deadline is not None and now > r.deadline
+                        and (eos < 0 or eos not in gen[i])):
+                    obs.counter("serve.deadline_truncated").inc()
+                    retire(i, reason="deadline_truncated")
+
+        with obs.span("serve.continuous", batch=B, n_requests=len(reqs)):
+            while pending or occupied():
+                retire_finished()
+                # ---- swap in: prefill queued requests into free slots
+                for i in range(B):
+                    if slots[i] is not None or not pending:
+                        continue
+                    r = pending.popleft()
+                    self._observe_queue_wait(r)
+                    t_sw = time.perf_counter()
+                    swapped = self._swap_in(r, i, state)
+                    swap_h.observe(time.perf_counter() - t_sw)
+                    st["swaps"] += 1
+                    if swapped is None:      # typed failure already logged
+                        continue
+                    state, first, n_att = swapped
+                    slots[i] = r
+                    gen[i] = [first]
+                    last_tok[i] = first
+                    uids[i] = r.uid
+                    attempts[i] = n_att
+                    retried[i] = n_att > 1
+                    st["n_tokens"] += 1
+                retire_finished()            # max_new==1 / expired deadlines
+                occ = occupied()
+                obs.gauge("serve.slot_occupancy").set(len(occ) / B)
+                if not occ:
+                    if pending:
+                        continue
+                    break
+                # ---- one masked decode step over the whole pool
+                tok = jnp.asarray(last_tok[:, None])
+                counts = np.fromiter((len(g) for g in gen), np.int64, B)
+                cur_state = state
+
+                def step_attempt() -> Tuple[DecodeState, np.ndarray]:
+                    faults.fault_point("serve.decode")
+                    logits, new_state = self._step(
+                        self.params, cur_state, tok)
+                    logits = faults.poison("serve.decode", logits)
+                    nxt = np.asarray(self._sample(logits[:, -1], uids,
+                                                  counts))
+                    host = np.asarray(logits[:, -1])
+                    if not np.isfinite(host[occ]).all():
+                        raise NonFiniteOutputError(
+                            "serve: non-finite logits")
+                    return new_state, nxt
+
+                n_att = [1]
+
+                def bump(_a, _e, _d):
+                    n_att[0] += 1
+                    for i in occ:
+                        attempts[i] += 1
+                        retried[i] = True
+
+                t_dec = time.perf_counter()
+                try:
+                    state, nxt = with_retry(
+                        step_attempt, policy=self.ecfg.retry,
+                        site="serve.decode", on_retry=bump,
+                    )
+                except Exception as e:  # noqa: BLE001 — per-slot degrade
+                    obs.counter("serve.step_failed").inc()
+                    for i in occ:
+                        r, toks = slots[i], gen[i]
+                        slots[i], gen[i] = None, []
+                        self._fail(r, e, attempts[i], tokens=toks)
+                    continue
+                dt_step = time.perf_counter() - t_dec
+                decode_h.observe(dt_step)
+                st["decode_s"] += dt_step
+                st["decode_steps"] += 1
+                st["slot_steps"] += B
+                st["active_slot_steps"] += len(occ)
+                for i in occ:
+                    t = int(nxt[i])
+                    gen[i].append(t)
+                    last_tok[i] = t
+                    st["n_tokens"] += 1
+                    if t == eos and len(gen[i]) > 1:
+                        retire(i)
+
+    def _swap_in(self, r: Request, slot: int, state: DecodeState):
+        """Prefill one request into pool row ``slot`` (retried under the
+        engine policy). Returns (new_state, first_token, attempts) or None
+        after recording a typed failure — never raises."""
+        n_att = [1]
+
+        def bump(_a, _e, _d):
+            n_att[0] += 1
+
+        prompt = jnp.asarray(r.prompt[None])
+        slot_ix = jnp.asarray(slot, jnp.int32)
+
+        def attempt():
+            with obs.span("serve.prefill", slot=slot, seq=len(r.prompt)) \
+                    as sp:
+                faults.fault_point("serve.prefill")
+                logits, new_state = self._prefill_slot(
+                    self.params, prompt, state, slot_ix)
+                logits = faults.poison("serve.prefill", logits)
+                jax.block_until_ready(logits)
+            obs.histogram("serve.prefill_s").observe(sp.duration_s)
+            self._check_logits(logits[:, -1])
+            return logits, new_state
+
+        try:
+            logits, new_state = with_retry(
+                attempt, policy=self.ecfg.retry, site="serve.prefill",
+                on_retry=bump,
+            )
+        except Exception as e:  # noqa: BLE001 — per-slot degrade
+            self._fail(r, e, n_att[0])
+            return None
+        first = int(np.asarray(
+            self._sample(logits[:, -1], [r.uid], [0]))[0])
+        return new_state, first, n_att[0]
+
+    # ------------------------------------------------- bucketed reference
     def _serve_bucket(self, reqs: List[Request]):
         """Retry-or-degrade wrapper: bucket retried whole, then failing
         requests re-run solo, and final stragglers are marked failed —
@@ -199,6 +505,8 @@ class ServingEngine:
             nonlocal attempts
             attempts += 1
 
+        for r in reqs:
+            self._observe_queue_wait(r)
         try:
             gen = with_retry(
                 lambda: self._run_bucket(reqs),
@@ -224,14 +532,7 @@ class ServingEngine:
                     res.degraded = True
                     res.reason = "bucket_degraded_to_solo"
             return
-        r = reqs[0]
-        obs.counter("serve.failed").inc()
-        self.results[r.uid] = RequestResult(
-            uid=r.uid, tokens=np.zeros(0, np.int32), ok=False,
-            degraded=True, attempts=attempts,
-            reason=f"{type(last).__name__}: {last}",
-        )
-        self.done[r.uid] = self.results[r.uid].tokens
+        self._fail(reqs[0], last, attempts)
 
     def _finish(self, reqs, gen, attempts=1, degraded=False, reason=""):
         for r_i, r in enumerate(reqs):
@@ -249,32 +550,12 @@ class ServingEngine:
             )
             self.done[r.uid] = toks
 
-    def _sample(self, logits) -> jnp.ndarray:
-        if self.ecfg.temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        self._rng, k = jax.random.split(self._rng)
-        return jax.random.categorical(
-            k, logits / self.ecfg.temperature, axis=-1
-        )
-
-    @staticmethod
-    def _check_logits(logits):
-        """Fault-site output validation: poisoned logits must not silently
-        become argmax(NaN)=0 tokens."""
-        host = np.asarray(logits)
-        if not np.isfinite(host).all():
-            raise NonFiniteOutputError("serve: non-finite logits")
-        return host
-
     def _run_bucket(self, reqs: List[Request]) -> List[List[int]]:
         """One attempt at a bucket; pure w.r.t. engine state so retries
         can re-run it from scratch (results land via ``_finish``)."""
         B = len(reqs)
-        t_start = time.perf_counter()
-        qw = obs.histogram("serve.queue_wait_s")
-        for r in reqs:
-            if r.t_submit > 0:
-                qw.observe(max(t_start - r.t_submit, 0.0))
+        uids = [r.uid for r in reqs]
+        st = self.last_stats
         with obs.span("serve.bucket", batch=B, seq=len(reqs[0].prompt)):
             prompts = jnp.asarray(np.stack([r.prompt for r in reqs]))
             with obs.span("serve.prefill") as sp:
@@ -285,23 +566,27 @@ class ServingEngine:
             obs.histogram("serve.prefill_s").observe(sp.duration_s)
             self._check_logits(logits[:, -1])
             max_new = max(r.max_new for r in reqs)
-            tok = self._sample(logits[:, -1])[:, None]
+            tok = self._sample(logits[:, -1], uids, [0] * B)[:, None]
             active = np.ones(B, bool)
             gen: List[List[int]] = [[] for _ in range(B)]
             for r_i in range(B):
                 gen[r_i].append(int(tok[r_i, 0]))
+            st["n_tokens"] += B
             decode_h = obs.histogram("serve.decode_token_s")
-            n_tok = B
-            t_dec0 = time.perf_counter()
             for _ in range(max_new - 1):
                 t0 = time.perf_counter()
                 faults.fault_point("serve.decode")
                 logits, state = self._step(self.params, state, tok)
                 logits = faults.poison("serve.decode", logits)
                 self._check_logits(logits[:, -1])
-                tok = self._sample(logits[:, -1])[:, None]
+                counts = [len(g) for g in gen]
+                tok = self._sample(logits[:, -1], uids, counts)[:, None]
                 host = np.asarray(tok[:, 0])   # device sync
-                decode_h.observe(time.perf_counter() - t0)
+                dt_step = time.perf_counter() - t0
+                decode_h.observe(dt_step)
+                st["decode_s"] += dt_step
+                st["decode_steps"] += 1
+                st["slot_steps"] += B
                 now = time.perf_counter()
                 for r_i in range(B):
                     if not active[r_i]:
@@ -318,15 +603,12 @@ class ServingEngine:
                         continue
                     t = int(host[r_i])
                     gen[r_i].append(t)
-                    n_tok += 1
+                    st["n_tokens"] += 1
+                    st["active_slot_steps"] += 1
                     if t == self.ecfg.eos_id:
                         active[r_i] = False
                 if not active.any():
                     break
-            dt_dec = time.perf_counter() - t_dec0
-            obs.counter("serve.tokens").inc(n_tok)
-            if dt_dec > 0:
-                obs.gauge("serve.tokens_per_s").set(n_tok / dt_dec)
         return gen
 
 

@@ -6,7 +6,18 @@ import pytest
 
 from repro.configs import ARCHS, reduced
 from repro.models import init_params, forward
+from repro.resilience import faults
 from repro.serve import ServingEngine, EngineConfig, cache_bytes
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_faults():
+    """These are exact-output tests, not chaos tests: neutralize any
+    ambient REPRO_FAULTS so the CI serve job can run them inside its
+    chaos matrix (the chaos coverage lives in test_serve_continuous /
+    test_resilience, which configure the injector explicitly)."""
+    faults.configure("", 0)
+    yield
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,251 @@
+"""Continuous-batching (slot-swap) serving tests.
+
+Covers the PR-8 acceptance criteria: greedy slot-swap output is
+token-identical to the bucketed reference oracle on mixed-length prompts
+with staggered EOS, per-slot deadline truncation, chaos (injected
+`serve.prefill`/`serve.decode` faults) still yields a terminal
+``RequestResult`` for every admitted uid, queue wait is observed exactly
+once per request even when retries fire, and sampling is a pure function
+of (seed, uid, position) so fault history cannot shift served tokens.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import init_params
+from repro.obs import metrics
+from repro.resilience import ReproValidationError, RetryPolicy, faults
+from repro.serve import EngineConfig, ServingEngine
+
+# chaos spec for the env-driven tests; the CI serve job's chaos matrix
+# overrides via REPRO_FAULTS
+CHAOS_SPEC = os.environ.get(
+    "REPRO_FAULTS", "serve.prefill:oom:0.15,serve.decode:nan:0.10")
+CHAOS_SEED = int(os.environ.get("REPRO_FAULTS_SEED", "42"))
+
+
+@pytest.fixture(autouse=True)
+def _explicit_faults_only():
+    """These tests drive the injector explicitly (exact-token asserts);
+    neutralize any ambient REPRO_FAULTS — chaos tests opt back in by
+    calling ``faults.configure(CHAOS_SPEC, ...)`` themselves."""
+    faults.configure("", 0)
+    yield
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["smollm-360m"])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mixed_workload(cfg, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    lens = [8, 12, 8, 16, 12, 9, 8, 16][:n]
+    return [(uid, rng.integers(0, cfg.vocab, L), 3 + (uid % 3) * 3)
+            for uid, L in enumerate(lens)]
+
+
+def _run(cfg, params, workload, **ekw):
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=4, max_seq=64, **ekw))
+    for uid, prompt, max_new in workload:
+        eng.submit(uid, prompt, max_new=max_new)
+    return eng, eng.run_detailed()
+
+
+# ----------------------------------------------------- oracle equivalence
+def test_greedy_matches_bucketed_oracle(setup):
+    """Slot-swap greedy decode is token-identical to the bucketed path on
+    mixed-length prompts with varied max_new."""
+    cfg, params = setup
+    wl = _mixed_workload(cfg)
+    _, ref = _run(cfg, params, wl, continuous_batching=False)
+    _, got = _run(cfg, params, wl, continuous_batching=True)
+    assert set(got) == set(ref)
+    for uid in ref:
+        assert got[uid].tokens.tolist() == ref[uid].tokens.tolist(), uid
+        assert got[uid].ok and ref[uid].ok
+
+
+def test_greedy_matches_oracle_with_staggered_eos(setup):
+    """Rows hitting EOS at different depths swap out early; outputs must
+    still match the bucketed reference exactly."""
+    cfg, params = setup
+    wl = _mixed_workload(cfg)
+    _, free = _run(cfg, params, wl, continuous_batching=True)
+    # pick a token that actually occurs mid-stream so stops stagger
+    counts = {}
+    for r in free.values():
+        for t in r.tokens.tolist()[1:]:
+            counts[t] = counts.get(t, 0) + 1
+    eos = max(counts, key=counts.get)
+    _, ref = _run(cfg, params, wl, continuous_batching=False, eos_id=eos)
+    _, got = _run(cfg, params, wl, continuous_batching=True, eos_id=eos)
+    lengths = set()
+    for uid in ref:
+        assert got[uid].tokens.tolist() == ref[uid].tokens.tolist(), uid
+        lengths.add(len(got[uid].tokens))
+    assert len(lengths) > 1, "EOS stops did not stagger"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v2-lite-16b", "rwkv6-3b"])
+def test_greedy_matches_oracle_other_mixers(arch):
+    """Per-row cursors hold for MLA latent caches and recurrent state."""
+    cfg = reduced(ARCHS[arch])
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    wl = _mixed_workload(cfg, n=5)
+    _, ref = _run(cfg, params, wl, continuous_batching=False)
+    _, got = _run(cfg, params, wl, continuous_batching=True)
+    for uid in ref:
+        assert got[uid].tokens.tolist() == ref[uid].tokens.tolist(), uid
+
+
+def test_enc_dec_falls_back_to_bucketed():
+    """Slot-swap has no per-row encoder-output scatter; whisper-style
+    configs must transparently use the bucketed reference path."""
+    cfg = reduced(ARCHS["whisper-large-v3"])
+    eng = ServingEngine(cfg, None, EngineConfig(max_batch=2, max_seq=32))
+    assert not eng._continuous
+
+
+# ------------------------------------------------------ per-slot deadline
+def test_per_slot_deadline_truncates(setup):
+    cfg, params = setup
+    eng, res = _run(cfg, params, [(0, np.arange(8), 16)],
+                    continuous_batching=True, request_timeout_s=1e-6)
+    assert res[0].ok and res[0].degraded
+    assert res[0].reason == "deadline_truncated"
+    assert 1 <= len(res[0].tokens) < 16
+
+
+def test_timeout_zero_means_expire_now(setup):
+    """request_timeout_s=0 is a real (immediate) deadline, not 'disabled'
+    — the old falsy check silently dropped it."""
+    cfg, params = setup
+    _, res = _run(cfg, params, [(0, np.arange(8), 16)],
+                  continuous_batching=True, request_timeout_s=0.0)
+    assert res[0].degraded and res[0].reason == "deadline_truncated"
+    assert len(res[0].tokens) < 16
+
+
+def test_negative_timeout_rejected(setup):
+    cfg, params = setup
+    with pytest.raises(ReproValidationError):
+        ServingEngine(cfg, params,
+                      EngineConfig(max_seq=64, request_timeout_s=-0.5))
+
+
+# ----------------------------------------------------------------- chaos
+def test_chaos_every_uid_terminal_and_deterministic(setup):
+    """Injected prefill/decode faults: every admitted uid ends in a
+    terminal RequestResult, and a fresh engine + freshly seeded injector
+    replays the identical outcome."""
+    cfg, params = setup
+
+    def chaos_run():
+        faults.configure(CHAOS_SPEC, seed=CHAOS_SEED)
+        eng, res = _run(cfg, params, _mixed_workload(cfg),
+                        continuous_batching=True, max_queue=32)
+        return res
+
+    res = chaos_run()
+    assert set(res) == set(range(8))
+    for r in res.values():
+        assert r.ok or (r.degraded and r.reason), r
+        assert isinstance(r.tokens, np.ndarray)
+    res2 = chaos_run()
+    assert {u: (r.ok, r.degraded, r.tokens.tolist())
+            for u, r in res.items()} == \
+           {u: (r.ok, r.degraded, r.tokens.tolist())
+            for u, r in res2.items()}
+
+
+def test_poisoned_decode_fails_per_slot_not_engine(setup):
+    """A 100% decode-NaN site: every request still terminates with a
+    typed failure and the scheduler itself never raises."""
+    cfg, params = setup
+    faults.configure("serve.decode:nan:1.0", seed=0)
+    eng, res = _run(cfg, params, _mixed_workload(cfg, n=5),
+                    continuous_batching=True,
+                    retry=RetryPolicy(max_attempts=2, base_delay_s=0.001))
+    assert set(res) == set(range(5))
+    for r in res.values():
+        assert not r.ok and r.degraded
+        assert "NonFinite" in r.reason or "Retries" in r.reason
+    assert metrics.export()["counters"]["serve.failed"] == 5
+
+
+# --------------------------------------------------------------- metrics
+@pytest.mark.parametrize("continuous", [True, False])
+def test_queue_wait_observed_once_per_request(setup, continuous):
+    """Retried work must not re-observe serve.queue_wait_s — one sample
+    per request, taken at the first service attempt."""
+    cfg, params = setup
+    faults.configure("serve.prefill:oom:0.5", seed=3)
+    wl = _mixed_workload(cfg, n=6)
+    _, res = _run(cfg, params, wl, continuous_batching=continuous)
+    exported = metrics.export()
+    assert exported["histograms"]["serve.queue_wait_s"]["count"] == len(wl)
+    # the spec above does force retries, so the old per-attempt
+    # observation would have counted > len(wl)
+    assert exported["counters"].get(
+        "resilience.retries.serve.prefill" if continuous
+        else "resilience.retries.serve.bucket", 0) >= 1
+    assert set(res) == {uid for uid, _, _ in wl}
+
+
+def test_swap_and_occupancy_metrics(setup):
+    cfg, params = setup
+    wl = _mixed_workload(cfg)
+    eng, res = _run(cfg, params, wl, continuous_batching=True)
+    exported = metrics.export()
+    assert exported["histograms"]["serve.swap_s"]["count"] == len(wl)
+    assert 0.0 <= exported["gauges"]["serve.slot_occupancy"] <= 1.0
+    assert "serve.slot_idle_frac" in exported["gauges"]
+    st = eng.last_stats
+    assert st["mode"] == "continuous"
+    assert st["swaps"] == len(wl)
+    assert 0 < st["active_slot_steps"] <= st["slot_steps"]
+    assert st["n_tokens"] == sum(len(r.tokens) for r in res.values())
+
+
+# ------------------------------------------------- sampling determinism
+def test_sampling_independent_of_fault_history(setup):
+    """Per-request fold_in(base_key, uid) keys: a retried/fault-ridden run
+    serves the same tokens as a clean run for every request that
+    completes — the engine-level RNG stream is gone."""
+    cfg, params = setup
+    wl = _mixed_workload(cfg, n=6)
+
+    def run(spec):
+        faults.configure(spec, seed=7)
+        _, res = _run(cfg, params, wl, continuous_batching=True,
+                      temperature=1.0, seed=5)
+        return {u: (r.ok, r.tokens.tolist()) for u, r in res.items()}
+
+    clean = run("")
+    chaotic = run("serve.prefill:oom:0.3,serve.decode:oom:0.2")
+    # the chaos run must actually have exercised the retry machinery
+    assert (metrics.export()["counters"].get("resilience.retries", 0) >= 1
+            or any(not ok for ok, _ in chaotic.values()))
+    for uid, (ok, toks) in chaotic.items():
+        if ok:
+            assert toks == clean[uid][1], uid
+
+
+def test_sampled_stream_matches_bucketed(setup):
+    """Both scheduling modes draw from the same (seed, uid, position)
+    keys, so even temperature sampling is schedule-invariant."""
+    cfg, params = setup
+    wl = _mixed_workload(cfg, n=6)
+    _, ref = _run(cfg, params, wl, continuous_batching=False,
+                  temperature=1.0, seed=3)
+    _, got = _run(cfg, params, wl, continuous_batching=True,
+                  temperature=1.0, seed=3)
+    for uid in ref:
+        assert got[uid].tokens.tolist() == ref[uid].tokens.tolist(), uid
