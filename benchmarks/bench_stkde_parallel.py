@@ -122,6 +122,48 @@ rows["_metrics"] = metrics.export()
 print("RESULT" + json.dumps(rows))
 """
 
+_CHUNKED_SUBPROC = r"""
+import json, os, tempfile
+import repro.compat
+import numpy as np, jax
+from repro.core import get_instance, pb
+from repro.core.api import stkde_chunked
+from repro.data.pipeline import stkde_stream
+from repro.obs import metrics, timeit, trace
+
+inst = get_instance({name!r}).scaled(max_voxels=300_000, max_points={n})
+dom = inst.domain()
+chunk = {chunk}
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+# reference: the same points in one monolithic shot (the path the old
+# bench_suite 8k-point cap protected); the stream is deterministic, so a
+# second pass re-draws the identical point set
+all_pts = np.concatenate([c for c, _ in stkde_stream(inst, chunk=chunk)])
+mono = timeit(lambda: pb(all_pts, dom), reps={reps},
+              name="chunked.mono", instance=inst.name).mean
+want = np.asarray(pb(all_pts, dom))
+
+jdir = tempfile.mkdtemp()
+def run_once():
+    return stkde_chunked(stkde_stream(inst, chunk=chunk), dom, mesh=mesh,
+                         strategy="dr", journal=os.path.join(jdir, "j"))
+res = run_once()
+chunked = timeit(run_once, reps={reps}, name="chunked.run",
+                 instance=inst.name).mean
+ok = bool(np.abs(res.grid - want).max() < 1e-5)
+rows = {{"instance": inst.name, "bench": "chunked", "n": int(inst.n),
+        "chunk_size": chunk, "chunks": res.report["chunks_total"],
+        "max_chunk_points": res.report["max_chunk_points"],
+        "mono_s": mono, "chunked_s": chunked,
+        "chunked_overhead_pct":
+            100.0 * (chunked - mono) / mono if mono else None,
+        "coverage": res.report["coverage"], "correct": ok}}
+rows["_trace_events"] = trace.get_tracer().export_events()
+rows["_metrics"] = metrics.export()
+print("RESULT" + json.dumps(rows))
+"""
+
 _sub_pid = 0   # synthetic pid per subprocess for the merged Chrome trace
 
 
@@ -185,6 +227,21 @@ def run_chaos(instance="Flu_Mr-Hb", spec=DEFAULT_CHAOS_SPEC, seed=42,
           f"(+{r['recovery_overhead_pct']:.1f}% recovery overhead; "
           f"{r['injected']:.0f} injected, {r['fallbacks']:.0f} fallbacks, "
           f"correct={r['correct']})")
+    return [r]
+
+
+def run_chunked(instance="Flu_Mr-Hb", quick=False) -> List[Dict]:
+    """Chunked-vs-monolithic benchmark at 32k points (4x the bench_suite
+    point cap): bounded-memory streamed ingestion + progress journaling
+    on the 8-device mesh, priced against the one-shot baseline.
+    """
+    n = 16_000 if quick else 32_000
+    r = _run_sub(_CHUNKED_SUBPROC.format(
+        name=instance, n=n, chunk=4096, reps=1 if quick else 2))
+    print(f"  {r['instance']}: n={r['n']} in {r['chunks']} chunks "
+          f"(max {r['max_chunk_points']} pts buffered), "
+          f"mono={r['mono_s']:.3f}s chunked={r['chunked_s']:.3f}s "
+          f"(+{r['chunked_overhead_pct']:.1f}%), correct={r['correct']}")
     return [r]
 
 

@@ -10,6 +10,7 @@ Sections:
   kernel     Pallas tile-kernel structural benchmark
   roofline   roofline table from dry-run artifacts (§Roofline)
   serve      continuous-batching vs bucketed serving engine
+  chunked    crash-safe chunked execution at 32k points (journal overhead)
 
 Output: ``name,us_per_call,derived`` CSV lines to stdout + JSON to
 results/bench/.
@@ -33,7 +34,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 SECTIONS = ("table3", "parallel", "ddover", "coloring", "kernel",
-            "roofline", "serve")
+            "roofline", "serve", "chunked")
 
 
 def main() -> None:
@@ -90,6 +91,11 @@ def main() -> None:
         print("== serve: continuous vs bucketed engine ==")
         from benchmarks import bench_serve
         all_results["serve"] = bench_serve.run(quick=args.quick)
+    if "chunked" in args.only:
+        print("== chunked: crash-safe chunked STKDE at 32k points ==")
+        from benchmarks import bench_stkde_parallel
+        all_results["chunked"] = bench_stkde_parallel.run_chunked(
+            quick=args.quick)
 
     if args.chaos:
         print("== chaos: fault-injection recovery overhead (8 devices) ==")
@@ -128,6 +134,7 @@ def main() -> None:
                        or r.get("replication_factor")
                        or r.get("tinf_sched_pct")
                        or r.get("recovery_overhead_pct")
+                       or r.get("chunked_overhead_pct")
                        or r.get("tokens_per_s") or "")
             print(f"{section}:{name},{'' if t is None else round(t, 1)},"
                   f"{derived}")

@@ -89,9 +89,14 @@ def stkde_dr(
     axes: Tuple[str, ...] = ("data", "model"),
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Domain replication: shard points, replicate grid, all-reduce."""
-    n = len(points)
+    """Domain replication: shard points, replicate grid, all-reduce.
+
+    ``n_total`` overrides the normalization count — chunked execution
+    passes the *global* point count while feeding a chunk at a time.
+    """
+    n = int(n_total) if n_total is not None else len(points)
     with obs_trace.span("stkde.dr", n=n, mesh=str(dict(mesh.shape))):
         with obs_trace.span("stkde.dr.prepare"):
             full = prepare_dr(points, dom, mesh, axes)
@@ -167,10 +172,11 @@ def stkde_dd(
     cap: Optional[int] = None,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
 ) -> jnp.ndarray:
     """Domain decomposition: block-sharded grid, overlap-routed points."""
     A, B = _mesh_sizes(mesh, axes)
-    n = len(points)
+    n = int(n_total) if n_total is not None else len(points)
     gx_loc, gy_loc = _device_grid_dims(dom, A, B)
     with obs_trace.span("stkde.dd", n=n, mesh=str(dict(mesh.shape))):
         with obs_trace.span("stkde.dd.bucket"):
@@ -237,6 +243,7 @@ def stkde_pd(
     cap: Optional[int] = None,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
     _rep_axis: Optional[str] = None,
     _pts_override=None,
 ) -> jnp.ndarray:
@@ -244,7 +251,7 @@ def stkde_pd(
     ax, ay = axes
     A, B = _mesh_sizes(mesh, axes)
     pts = np.asarray(points, dtype=np.float32)
-    n = len(pts)
+    n = int(n_total) if n_total is not None else len(pts)
     gx_loc, gy_loc = _device_grid_dims(dom, A, B)
     Hs = dom.Hs
     if gx_loc < Hs or gy_loc < Hs:
@@ -418,12 +425,13 @@ def stkde_pd_xt(
     cap: Optional[int] = None,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
 ) -> jnp.ndarray:
     """PD with an (X, T) device grid (small temporal halos)."""
     ax, at = axes
     A, B = _mesh_sizes(mesh, axes)
     pts = np.asarray(points, dtype=np.float32)
-    n = len(pts)
+    n = int(n_total) if n_total is not None else len(pts)
     gx_loc = math.ceil(dom.Gx / A)
     gt_loc = math.ceil(dom.Gt / B)
     b = bucketing.bucket_points_home(
@@ -517,11 +525,12 @@ def stkde_pd_xyt(
     cap: Optional[int] = None,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
 ) -> jnp.ndarray:
     """Paper-style 3-D decomposition across a three-axis (multi-pod) mesh."""
     A, B, C = _mesh_sizes(mesh, axes)
     pts = np.asarray(points, dtype=np.float32)
-    n = len(pts)
+    n = int(n_total) if n_total is not None else len(pts)
     gx_loc = math.ceil(dom.Gx / A)
     gy_loc = math.ceil(dom.Gy / B)
     gt_loc = math.ceil(dom.Gt / C)
@@ -551,6 +560,7 @@ def stkde_hybrid(
     cap: Optional[int] = None,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
 ) -> jnp.ndarray:
     """PD over the worker grid × DR over the ``rep`` axis (PB-SYM-PD-REP).
 
@@ -577,7 +587,7 @@ def stkde_hybrid(
     dpts[r_of, :, :, p_of] = np.transpose(src, (2, 0, 1, 3))
     dval[r_of, :, :, p_of] = np.transpose(val, (2, 0, 1)).astype(np.float32)
     return stkde_pd(
-        pts, dom, mesh, axes, cap=cap, ks=ks, kt=kt,
+        pts, dom, mesh, axes, cap=cap, ks=ks, kt=kt, n_total=n_total,
         _rep_axis=rep_axis,
         _pts_override=(jnp.asarray(dpts), jnp.asarray(dval)),
     )
@@ -593,6 +603,7 @@ def stkde_dd_lpt(
     cap: Optional[int] = None,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
 ) -> jnp.ndarray:
     """Fine-tile DD with LPT load-aware placement (PD-SCHED as placement).
 
@@ -605,7 +616,7 @@ def stkde_dd_lpt(
     A, B = _mesh_sizes(mesh, axes)
     Ptot = A * B
     pts = np.asarray(points, dtype=np.float32)
-    n = len(pts)
+    n = int(n_total) if n_total is not None else len(pts)
     if tile is None:
         tile = bucketing.default_tile(dom)
     bx, by, bt = tile
@@ -692,3 +703,42 @@ STRATEGIES = {
     "dd_lpt": stkde_dd_lpt,
     "hybrid": stkde_hybrid,
 }
+
+
+# -------------------------------------------------------------- chunked
+def execute_chunk(
+    points: np.ndarray,
+    dom: Domain,
+    mesh: Mesh,
+    strategy: str,
+    axes: Tuple[str, ...] = ("data", "model"),
+    rep_axis: Optional[str] = None,
+    cap: Optional[int] = None,
+    ks: km.SpatialKernel = km.DEFAULT_KS,
+    kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
+) -> jnp.ndarray:
+    """One chunk of a chunked run on the current mesh (normalized by the
+    *global* ``n_total``).
+
+    The ``dist.device`` fault site models a device dying mid-chunk: an
+    injected oom/drop here surfaces as a non-transient ``DeviceLostError``
+    so the chunked executor (``core.api.stkde_chunked``) re-plans the
+    remaining chunks onto a shrunken mesh instead of retrying a dead one.
+    """
+    from repro.resilience.errors import DeviceLostError, FaultInjectedError
+
+    shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    try:
+        _faults.fault_point("dist.device")
+    except FaultInjectedError as e:
+        raise DeviceLostError("dist.device", mesh_shape=shape) from e
+    fn = STRATEGIES[strategy]
+    kw = dict(axes=axes, ks=ks, kt=kt, n_total=n_total)
+    if strategy == "hybrid":
+        kw["rep_axis"] = rep_axis or "pod"
+    elif cap is not None and strategy in ("dd", "pd", "pd_xt", "pd_xyt"):
+        # fixed bucket capacity keeps the jitted shapes identical across
+        # chunks (one compile per (strategy, mesh), not per chunk)
+        kw["cap"] = cap
+    return fn(points, dom, mesh, **kw)

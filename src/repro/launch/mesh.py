@@ -1,8 +1,9 @@
 """Production mesh construction (pure function — importing this module never
-touches jax device state)."""
+touches jax device state) plus failure-driven mesh shrinking."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,6 +17,37 @@ def make_production_mesh(*, multi_pod: bool = False):
         shape, axes,
         axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
     )
+
+
+def shrink_mesh(mesh, n_lost: int = 1):
+    """Rebuild ``mesh`` after losing ``n_lost`` devices (tail devices are
+    dropped — the injector does not name a victim, and any survivor
+    permutation is equivalent for our collectives).
+
+    Axis names are preserved so strategy code keeps working unchanged.
+    The trailing (model) axis size is kept where possible and halved
+    until the survivors fill at least one full row; leading extra axes
+    (e.g. ``pod``) collapse to 1. Returns ``None`` when fewer than two
+    usable devices remain — the caller then degrades to single-device
+    execution.
+    """
+    devices = list(np.asarray(mesh.devices).reshape(-1))
+    survivors = devices[: len(devices) - n_lost]
+    names = tuple(mesh.axis_names)
+    last = int(mesh.shape[names[-1]]) if len(names) > 1 else 1
+    n = len(survivors)
+    while last > 1 and n // last < 1:
+        last //= 2
+    lead = n // max(1, last)
+    used = lead * last
+    if used < 2:
+        return None
+    if len(names) == 1:
+        shape = (used,)
+    else:
+        shape = (1,) * (len(names) - 2) + (lead, last)
+    arr = np.asarray(survivors[:used]).reshape(shape)
+    return jax.sharding.Mesh(arr, names)
 
 
 def make_host_mesh(n_devices: int = 8, multi_pod: bool = False):

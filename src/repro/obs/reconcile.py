@@ -38,17 +38,11 @@ PROBED = ("dr", "dd", "pd")
 
 
 def _default_hw():
-    """V5E on TPU backends; rough host constants on CPU (so the smoke-run
-    relative errors are about calibration, not about CPU != TPU)."""
+    """V5E on TPU backends; calibrated host constants on CPU (so the
+    smoke-run relative errors are about calibration, not CPU != TPU)."""
     from repro.core import plan
 
-    try:
-        import jax
-
-        backend = jax.default_backend()
-    except Exception:
-        backend = "cpu"
-    return plan.HOST if backend == "cpu" else plan.V5E
+    return plan.default_hw()
 
 
 def measure_strategy(

@@ -4,24 +4,29 @@
   faults   deterministic seedable fault injector (``REPRO_FAULTS`` env)
   retry    ``with_retry`` — exponential backoff + jitter + deadline
   degrade  coarsen/subsample fallback for STKDE queries (tagged results)
+  journal  durable progress journal for crash-safe resumable STKDE
 
 ``faults``/``retry``/``errors`` depend only on stdlib + ``repro.obs``
 (itself stdlib-only), so any layer of the stack can import them without
-cycles; ``degrade`` additionally uses ``core.geometry`` and numpy.
+cycles; ``degrade``/``journal`` additionally use numpy (and ``degrade``
+``core.geometry``).
 """
-from . import degrade, errors, faults, retry
+from . import degrade, errors, faults, journal, retry
 from .degrade import DegradedResult, DegradePolicy, run_with_degrade
 from .errors import (
     AdmissionError,
     CheckpointCorruptError,
     DeadlineExceededError,
+    DeviceLostError,
     FaultInjectedError,
+    JournalCorruptError,
     NonFiniteOutputError,
     ReproError,
     ReproValidationError,
     RetriesExhaustedError,
     is_transient,
 )
+from .journal import ProgressJournal, Salvage, fingerprint_of
 from .faults import FaultInjector, configure, fault_point, get_injector
 from .retry import RetryPolicy, with_retry
 
@@ -29,7 +34,13 @@ __all__ = [
     "degrade",
     "errors",
     "faults",
+    "journal",
     "retry",
+    "ProgressJournal",
+    "Salvage",
+    "fingerprint_of",
+    "DeviceLostError",
+    "JournalCorruptError",
     "DegradedResult",
     "DegradePolicy",
     "run_with_degrade",

@@ -40,6 +40,29 @@ class CheckpointCorruptError(ReproError):
     """Checkpoint bytes failed checksum / structural verification."""
 
 
+class JournalCorruptError(CheckpointCorruptError):
+    """A progress-journal record or grid snapshot failed verification.
+
+    Transient at *write* time (the journal re-writes through ``with_retry``
+    like checkpoints do); at *replay* time it is handled structurally —
+    corrupt tail records are dropped, never retried.
+    """
+
+
+class DeviceLostError(ReproError):
+    """A device in the active mesh died mid-computation (never retried
+    on the same mesh — the chunked executor re-plans onto a shrunken
+    mesh instead; see docs/resilience.md "Resumable execution")."""
+
+    def __init__(self, site: str, mesh_shape=None):
+        self.site = site
+        self.mesh_shape = tuple(mesh_shape) if mesh_shape else None
+        super().__init__(
+            f"DEVICE_LOST: [{site}] device failed mid-run"
+            + (f" on mesh {self.mesh_shape}" if self.mesh_shape else "")
+        )
+
+
 class RetriesExhaustedError(ReproError):
     """``with_retry`` gave up; ``__cause__`` holds the last failure."""
 
@@ -94,7 +117,7 @@ def is_transient(exc: BaseException) -> bool:
     """Retryability oracle: injected faults, OOMs, I/O errors — not
     validation/admission errors, not arbitrary bugs."""
     if isinstance(exc, (ReproValidationError, AdmissionError,
-                        DeadlineExceededError)):
+                        DeadlineExceededError, DeviceLostError)):
         return False
     if isinstance(exc, _TRANSIENT):
         return True

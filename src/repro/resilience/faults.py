@@ -12,7 +12,8 @@ Spec grammar (env var ``REPRO_FAULTS`` or ``configure()``)::
     REPRO_FAULTS="serve.prefill:oom:0.1,ckpt.write:corrupt:0.25"
     REPRO_FAULTS="*:drop:0.05"          # wildcard: every known site
 
-Sites:  serve.prefill  serve.decode  dist.halo  ckpt.write  data.read
+Sites:  serve.prefill  serve.decode  dist.halo  dist.device  ckpt.write
+        journal.write  stkde.chunk   data.read
 Kinds:  oom      raise InjectedOOMError (XlaRuntimeError-styled)
         drop     raise InjectedDropError
         delay    sleep ``param`` seconds (default 0.05)
@@ -42,7 +43,10 @@ SITES = (
     "serve.prefill",
     "serve.decode",
     "dist.halo",
+    "dist.device",
     "ckpt.write",
+    "journal.write",
+    "stkde.chunk",
     "data.read",
 )
 KINDS = ("oom", "drop", "delay", "corrupt", "nan")

@@ -37,3 +37,31 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
             f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
         )
     return proc.stdout
+
+
+def popen_with_devices(code: str, n_devices: int = 8,
+                       clean_faults: bool = True) -> subprocess.Popen:
+    """Launch the snippet without waiting — for kill/crash tests.
+
+    Same environment setup as ``run_with_devices`` but returns the live
+    ``subprocess.Popen`` so the caller can SIGKILL it mid-run and inspect
+    the on-disk state it left behind. ``clean_faults`` strips any ambient
+    ``REPRO_FAULTS`` so determinism tests control injection explicitly.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + env.get("XLA_FLAGS", "")
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if clean_faults:
+        env.pop("REPRO_FAULTS", None)
+    code = "import repro.compat\n" + code
+    return subprocess.Popen(
+        [sys.executable, "-c", code],
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
