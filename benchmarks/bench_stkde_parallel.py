@@ -76,7 +76,9 @@ suite = bench_suite(max_voxels=500_000, max_points=8_000)
 inst = suite[{name!r}]
 dom = inst.domain()
 pts = inst.points()
-mesh = jax.make_mesh((4, 2), ("data", "model"))
+# 3-axis mesh: pod serves as hybrid's rep axis / pd_xyt's X cut; the
+# worker-2D strategies span (data, model) and leave pod replicated
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = reconcile.run(pts, dom, mesh, reps={reps})
 out["instance"] = {name!r}
 out["_trace_events"] = trace.get_tracer().export_events()
@@ -198,8 +200,10 @@ def _run_sub(code: str, n_dev: int = 8) -> dict:
 def run_reconcile(instance="Flu_Mr-Hb", quick=False) -> List[Dict]:
     """Planner predicted-vs-measured phase reconciliation (8-device mesh).
 
-    Runs in the same 8-fake-device subprocess as the speedup benchmarks;
-    needs a PD-feasible instance on the 4x2 mesh (subdomain >= Hs).
+    Probes every strategy in the ``obs.reconcile.PROBED`` registry on a
+    2x2x2 pod/data/model mesh in the same 8-fake-device subprocess as
+    the speedup benchmarks; needs an instance whose 2x2 worker subdomains
+    satisfy every strategy's bandwidth constraint (subdomain >= Hs/Ht).
     """
     r = _run_sub(_RECONCILE_SUBPROC.format(
         name=instance, reps=2 if quick else 3))

@@ -280,10 +280,12 @@ def main():
               f"(host mesh {mesh_s})\n")
         print(reconcile_table(results))
         print("\nHost compute predictions use the calibrated `plan.HOST` "
-              "constants (fit from earlier reconcile rows via "
-              "`plan.calibrate_host`); compute rel-err should sit inside "
-              "the ~2x band. Residual comm-term error is expected — the "
-              "dr probe measures ~0 comm on shared memory.")
+              "constants (two-rate fit via `plan.calibrate_host`: "
+              "scatter-path strategies share one flops rate, `dd_lpt`'s "
+              "GEMM tile path is priced via `mxu_derate`); compute "
+              "rel-err across all seven registry strategies should sit "
+              "inside the 5x acceptance band. Residual comm-term error "
+              "is expected — collectives measure ~0 on shared memory.")
     res_p = "results/bench/results.json"
     met_p = "results/bench/metrics.json"
     chaos_rows = []

@@ -1,0 +1,55 @@
+"""Fail-loudly planner reconciliation smoke — CI gate for the registry.
+
+    PYTHONPATH=src python -m benchmarks.reconcile_smoke
+
+Runs ``obs.reconcile.run`` over EVERY ``StrategyProbe`` registry strategy
+(dr, dd, pd, pd_xt, pd_xyt, dd_lpt, hybrid) on an 8-device CPU mesh
+(2x2x2 pod/data/model fake hosts) with ``reps=1`` on a tiny domain, then
+exits non-zero if any registry strategy or any timing term is missing
+from the emitted rows. CI runs this as its own leg so a probe that
+silently stops building (e.g. a registry entry whose builder signature
+drifted) fails the build instead of quietly thinning the dashboards.
+"""
+import os
+import sys
+
+# must be set before jax is imported anywhere
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
+_root = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _root)
+sys.path.insert(0, os.path.join(_root, "src"))
+
+
+def main() -> int:
+    import jax
+
+    from repro.core import Domain, clustered_events
+    from repro.obs import reconcile
+
+    dom = Domain(gx=48.0, gy=48.0, gt=16.0, sres=1.0, tres=1.0,
+                 hs=3.0, ht=2.0)
+    pts = clustered_events(1500, dom, seed=0)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    res = reconcile.run(pts, dom, mesh, reps=1)
+    print(res["report"])
+
+    missing = []
+    for strat in reconcile.PROBED:
+        have = {r["term"] for r in res["rows"] if r["strategy"] == strat}
+        missing += [f"{strat}/{t}" for t in reconcile.TERMS if t not in have]
+    if missing:
+        print("MISSING reconcile rows:", ", ".join(missing))
+        return 1
+    print(f"reconcile smoke ok: {len(reconcile.PROBED)} strategies x "
+          f"{len(reconcile.TERMS)} terms = {len(res['rows'])} rows "
+          f"on mesh {res['mesh']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

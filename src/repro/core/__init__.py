@@ -11,8 +11,13 @@ from .datasets import (
     bench_suite,
     clustered_events,
 )
+# keep last: api pulls in resilience, which imports core.geometry above
+from .api import ChunkedResult, stkde, stkde_chunked
 
 __all__ = [
+    "ChunkedResult",
+    "stkde",
+    "stkde_chunked",
     "Domain",
     "from_points",
     "kernels_math",

@@ -4,9 +4,10 @@
     grid = stkde(points, dom)                       # single device
     grid = stkde(points, dom, mesh=mesh)            # auto strategy on mesh
     grid = stkde(points, dom, mesh=mesh, strategy="pd")
-    grid = stkde(points, dom, chunk_size=4096,      # crash-safe chunked run
-                 journal="runs/j1")
-    grid = stkde(points, dom, resume="runs/j1")     # salvage + continue
+    res = stkde(points, dom, chunk_size=4096,       # crash-safe chunked run
+                journal="runs/j1")                  # -> ChunkedResult
+    res = stkde(points, dom, resume="runs/j1")      # salvage + continue
+    grid = np.asarray(res)                          # or res.grid
 
 Robustness contract (docs/resilience.md): inputs are validated at this
 boundary (typed ``ReproValidationError`` instead of downstream shape
@@ -94,7 +95,7 @@ def stkde(
     chunk_size: Optional[int] = None,
     journal: Optional[str] = None,
     resume: Optional[str] = None,
-) -> jnp.ndarray:
+) -> Union[jnp.ndarray, "ChunkedResult"]:
     """Space-time kernel density grid for ``points`` over ``dom``.
 
     strategy: "auto" | "dr" | "dd" | "pd" | "dd_lpt" | "hybrid"
@@ -109,16 +110,17 @@ def stkde(
               ingestion, per-chunk progress journaling to the ``journal``
               directory, and ``resume=<journal dir>`` salvaging a killed
               run's completed chunks before continuing. The chunked path
-              returns the float64 accumulator grid.
+              returns a ``ChunkedResult`` (array-like: ``np.asarray(res)``
+              or ``res.grid`` is the float64 accumulator grid; ``.report``
+              carries coverage/recovery details).
     """
     if chunk_size is not None or journal is not None or resume is not None:
-        res = stkde_chunked(
+        return stkde_chunked(
             points, dom, mesh=mesh, strategy=strategy, axes=axes,
             rep_axis=rep_axis, ks=ks, kt=kt, chunk_size=chunk_size,
             journal=resume if resume is not None else journal,
             resume=resume is not None, validate=validate,
         )
-        return res.grid
     if validate:
         pts = validate_inputs(points, dom)
     else:
@@ -147,12 +149,15 @@ def stkde(
         tile = (math.ceil(dom.Gx / A), math.ceil(dom.Gy / B), dom.Gt)
         loads = bucketing.bucket_points_home(pts, dom, tile).counts
         strategy, _ = _plan.choose(dom, len(pts), shape, loads.reshape(-1))
-        if strategy == "hybrid" and rep_axis is None:
+        if strategy in ("hybrid", "pd_xyt") and rep_axis is None:
             strategy = "pd"
     fn = STRATEGIES[strategy]
     kw = dict(axes=axes, ks=ks, kt=kt)
     if strategy == "hybrid":
         kw["rep_axis"] = rep_axis or "pod"
+    elif strategy == "pd_xyt" and len(axes) == 2:
+        # 3-D split needs a third mesh axis: the rep axis becomes the X cut
+        kw["axes"] = (rep_axis or "pod",) + tuple(axes)
     try:
         return ensure_finite(fn(pts, dom, mesh, **kw),
                              f"stkde.{strategy}")
@@ -181,16 +186,26 @@ _CHUNK_POLICY = RetryPolicy(max_attempts=3, base_delay_s=0.01,
 
 @dataclasses.dataclass
 class ChunkedResult:
-    """Result of a chunked (crash-safe) STKDE run.
+    """Result of a chunked (crash-safe) STKDE run — the single result type
+    of the chunked surface (returned by ``stkde_chunked`` *and* by
+    ``stkde`` whenever ``chunk_size``/``journal``/``resume`` engage the
+    chunked path).
 
     ``grid`` is the float64 accumulator — chunk contributions are summed
     host-side in float64 *in fixed chunk order*, which is what makes an
     interrupted-and-resumed run bit-identical to an uninterrupted one.
+    The object is array-like (``__array__`` forwards to ``grid``), so
+    ``np.asarray(result)`` and numpy ufuncs keep working for callers that
+    only want the density grid.
     """
 
     grid: np.ndarray
     report: Dict[str, Any]
     journal_path: Optional[str] = None
+
+    def __array__(self, dtype=None):
+        return (np.asarray(self.grid) if dtype is None
+                else np.asarray(self.grid, dtype=dtype))
 
 
 def _chunk_fingerprint(dom: Domain, n_total: int, chunk_desc, strategy: str,
@@ -224,7 +239,7 @@ def _replan_after_loss(dom: Domain, n_total: int, mesh, axes, rep_axis):
              else (A, B))
     strat, _ = _plan.choose(dom, n_total, shape, None,
                             hw=_plan.default_hw())
-    if strat == "hybrid" and rep_axis is None:
+    if strat in ("hybrid", "pd_xyt") and rep_axis is None:
         strat = "pd"
     return new_mesh, strat
 
@@ -310,7 +325,7 @@ def stkde_chunked(
             loads = None  # streams can't be pre-bucketed; use defaults
         strat, _ = _plan.choose(dom, n_total, shape, loads,
                                 hw=_plan.default_hw())
-        if strat == "hybrid" and rep_axis is None:
+        if strat in ("hybrid", "pd_xyt") and rep_axis is None:
             strat = "pd"
     else:
         strat = strategy

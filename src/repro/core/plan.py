@@ -19,7 +19,7 @@ import dataclasses
 import json
 import math
 import os
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -53,27 +53,53 @@ HOST_SEED = Hardware(
     mxu_derate=1.0,
 )
 
-# Calibrated against results/bench/reconcile.json (mesh 4x2, n=8000): the
-# measured/predicted compute ratios were dr 3.06e4, dd 5.17e3, pd 1.30e4 —
-# XLA:CPU's scatter path dispatches per point, nowhere near vector peak.
-# Dividing peak_flops by the geometric mean of those ratios (~1.27e4) puts
-# every strategy's compute rel-err inside the ~2x band (dr ~2.4x slow,
-# dd ~0.4x, pd ~1.0x). Memory-bandwidth (init) terms were already within
-# 0.8–1.8x and are left at their seed values, as is ici_bw (the dr probe
-# measures ~0 comm on shared memory, so a bandwidth "fit" is unidentifiable
-# from these rows and would distort choose()).
-HOST = dataclasses.replace(HOST_SEED, peak_flops=3.9e6)
+# Calibrated against results/bench/reconcile.json (mesh 2x2x2, n=8000, all
+# seven probed strategies): XLA:CPU's scatter path dispatches per point,
+# nowhere near vector peak — peak_flops carries the geo-mean-fitted scatter
+# rate (dr/dd/pd/pd_xt/pd_xyt/hybrid compute rel-err lands within ~2x).
+# dd_lpt's separable tile contraction is a GEMM and runs ~15x faster than
+# the scatter strategies on the same cores, so its rate is carried
+# separately in mxu_derate (see estimate()'s rate_tile). Memory-bandwidth
+# (init) terms were already within ~2x and are left at their seed values,
+# as is ici_bw (the collective probes measure ~ms-scale comm on shared
+# memory, so a bandwidth "fit" is unidentifiable from these rows and would
+# distort choose()).
+HOST = dataclasses.replace(HOST_SEED, peak_flops=3.0e6, mxu_derate=15.5)
 
 
-def calibrate_host(rows, base: Hardware = HOST_SEED) -> Hardware:
-    """Re-fit the host compute rate from reconcile rows.
+def probed_strategies() -> Tuple[str, ...]:
+    """Strategy names with a phase-probe spec (``obs.reconcile.PROBED``).
+
+    Single source of truth for which rows calibration may trust — derived
+    from the probe registry so the two can never drift.
+    """
+    from repro.obs import reconcile
+
+    return tuple(reconcile.PROBED)
+
+
+# strategies whose compute runs on the tile-GEMM (einsum/MXU) path; every
+# other strategy is on the scatter (VPU) path — see estimate()
+TILE_PATH = ("dd_lpt",)
+
+
+def calibrate_host(rows, base: Hardware = HOST_SEED,
+                   strategies: Optional[Sequence[str]] = None) -> Hardware:
+    """Re-fit the host compute rates from reconcile rows.
 
     ``rows`` is the ``rows`` list of a ``obs.reconcile`` report (or a path
     to one): entries with ``term == "compute_s"`` and positive
-    predicted/measured values contribute ``measured / predicted`` ratios,
-    and ``base.peak_flops`` (the Hardware that *produced* those
-    predictions) is divided by their geometric mean. Terms other than
-    compute are left untouched — see the HOST comment above.
+    predicted/measured values contribute ``measured / predicted`` ratios.
+    ``base.peak_flops`` (the Hardware that *produced* those predictions)
+    is divided by the geometric mean of the scatter-path strategies'
+    ratios; ``base.mxu_derate`` is re-fitted from the ``TILE_PATH``
+    strategies' ratios so the tile-GEMM rate tracks its own measurement.
+    Terms other than compute are left untouched — see the HOST comment
+    above.
+
+    ``strategies`` limits which rows contribute; it defaults to the probe
+    registry keys (``obs.reconcile.PROBED``) so rows from unknown or
+    retired strategies in an old report can't skew the fit.
     """
     if isinstance(rows, (str, os.PathLike)):
         with open(rows) as f:
@@ -83,16 +109,32 @@ def calibrate_host(rows, base: Hardware = HOST_SEED) -> Hardware:
     if rows and isinstance(rows[0], dict) and "rows" in rows[0]:
         # a reconcile.json file: list of per-run reports, each with rows
         rows = [r for rep in rows for r in rep.get("rows", [])]
-    ratios = [
-        r["measured_s"] / r["predicted_s"]
-        for r in rows
-        if r.get("term") == "compute_s"
-        and r.get("predicted_s", 0) > 0 and r.get("measured_s", 0) > 0
-    ]
-    if not ratios:
-        return base
-    g = math.exp(sum(math.log(x) for x in ratios) / len(ratios))
-    return dataclasses.replace(base, peak_flops=base.peak_flops / g)
+    allowed = set(probed_strategies() if strategies is None else strategies)
+
+    def geomean_ratio(names):
+        ratios = [
+            r["measured_s"] / r["predicted_s"]
+            for r in rows
+            if r.get("term") == "compute_s"
+            and r.get("strategy") in names
+            and r.get("predicted_s", 0) > 0 and r.get("measured_s", 0) > 0
+        ]
+        if not ratios:
+            return None
+        return math.exp(sum(math.log(x) for x in ratios) / len(ratios))
+
+    g_scatter = geomean_ratio(allowed - set(TILE_PATH))
+    g_tile = geomean_ratio(allowed & set(TILE_PATH))
+    out = base
+    if g_scatter is not None:
+        out = dataclasses.replace(out, peak_flops=base.peak_flops / g_scatter)
+    if g_tile is not None:
+        # tile rate = peak_flops * mxu_derate must shrink by g_tile; the
+        # peak_flops change above is compensated inside the derate
+        scale = g_scatter if g_scatter is not None else 1.0
+        out = dataclasses.replace(
+            out, mxu_derate=base.mxu_derate * scale / g_tile)
+    return out
 
 
 def default_hw() -> Hardware:
@@ -132,7 +174,13 @@ def estimate(
     gy_loc = math.ceil(dom.Gy / B)
     sub_b = gx_loc * gy_loc * dom.Gt * 4.0
     halo_b = 2 * (gx_loc + gy_loc + 2 * dom.Hs) * dom.Hs * dom.Gt * 4.0
-    compute_rate = hw.peak_flops * (
+    # Two compute paths with very different efficiency: the scatter-based
+    # PB-SYM strategies (dr/dd/pd/pd_xt/pd_xyt/hybrid) run at the VPU
+    # rate, while dd_lpt's separable tile contraction is a GEMM (MXU)
+    # workload. Pricing them with one shared rate hid a >10x compute
+    # misprediction for dd_lpt in the reconcile rows.
+    rate_scatter = hw.peak_flops * hw.vpu_derate
+    rate_tile = hw.peak_flops * (
         hw.mxu_derate if use_mxu else hw.vpu_derate
     )
 
@@ -153,16 +201,15 @@ def estimate(
     w = _point_work_flops(dom, float(n))
     out: Dict[str, Dict[str, float]] = {}
 
-    def entry(init_b, flops, imb, comm_b, mem_b, note=""):
+    def entry(init_b, flops, imb, comm_b, mem_b, rate=rate_scatter):
+        compute_s = flops * imb / (P * rate)
         return {
             "init_s": init_b / hw.hbm_bw,
-            "compute_s": flops * imb / (P * compute_rate),
+            "compute_s": compute_s,
             "comm_s": comm_b / hw.ici_bw,
             "mem_per_dev_gb": mem_b / 1e9,
             "feasible": float(mem_b < hw.hbm_bytes),
-            "total_s": init_b / hw.hbm_bw
-            + flops * imb / (P * compute_rate)
-            + comm_b / hw.ici_bw,
+            "total_s": init_b / hw.hbm_bw + compute_s + comm_b / hw.ici_bw,
         }
 
     # DR: full grid per device; ring all-reduce ~ 2*Gb*(P-1)/P per device
@@ -193,9 +240,36 @@ def estimate(
     )
     out["pd_xt"]["feasible"] *= float(
         gx_loc >= dom.Hs and gt_loc >= dom.Ht)
-    # DD-LPT: full grid per device (tile soup assembly via psum)
+    # PD-XYT: full 3-D split — a 3-tuple mesh_shape is read as the
+    # (X, Y, T) device grid for this entry (the leading axis splits X
+    # instead of replicating). On a 2-D mesh there is no T axis to
+    # split, so the strategy is priced like pd but marked infeasible.
+    if len(mesh_shape) == 3:
+        X, Y, T = mesh_shape
+        gx3 = math.ceil(dom.Gx / X)
+        gy3 = math.ceil(dom.Gy / Y)
+        gt3 = math.ceil(dom.Gt / T)
+        halo_xyt = 2 * (
+            dom.Hs * gy3 * gt3 + dom.Hs * gx3 * gt3 + dom.Ht * gx3 * gy3
+        ) * 4.0
+        out["pd_xyt"] = entry(
+            (gx3 + 2 * dom.Hs) * (gy3 + 2 * dom.Hs)
+            * (gt3 + 2 * dom.Ht) * 4.0,
+            w,
+            imb_block,
+            halo_xyt,
+            gx3 * gy3 * gt3 * 4.0 * 2,
+        )
+        out["pd_xyt"]["feasible"] *= float(
+            gx3 >= dom.Hs and gy3 >= dom.Hs and gt3 >= dom.Ht)
+    else:
+        out["pd_xyt"] = dict(out["pd"])
+        out["pd_xyt"]["feasible"] = 0.0
+    # DD-LPT: full grid per device (tile soup assembly via psum); the
+    # only strategy on the tile-GEMM compute path
     out["dd_lpt"] = entry(
-        Gb, w * rep_dd, imb_lpt, 2 * Gb * (P - 1) / P, 2 * Gb
+        Gb, w * rep_dd, imb_lpt, 2 * Gb * (P - 1) / P, 2 * Gb,
+        rate=rate_tile,
     )
     # hybrid (R-way REP over PD): psum of subgrids over R + halo
     out["hybrid"] = entry(

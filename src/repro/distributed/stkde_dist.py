@@ -306,7 +306,12 @@ def build_pd(dom: Domain, mesh: Mesh, axes, n: int,
             P(rep_axis, ax, ay, None, None),
             P(rep_axis, ax, ay, None),
         )
-    out_specs = P(ax, ay, None, None, None)
+    if rep_axis is not None and not collectives:
+        # no rep-psum to make the output rep-invariant: return the
+        # rep-stacked partial grids instead (reconciliation probe layout)
+        out_specs = P(rep_axis, ax, ay, None, None, None)
+    else:
+        out_specs = P(ax, ay, None, None, None)
 
     def f(pts_blk, val_blk):
         i = jax.lax.axis_index(ax).astype(jnp.float32)
@@ -323,7 +328,8 @@ def build_pd(dom: Domain, mesh: Mesh, axes, n: int,
         )
         L = _pb(p - shift, ldom, variant="sym", ks=ks, kt=kt, n_total=n)
         if not collectives:
-            return L[Hs : Hs + gx_loc, Hs : Hs + gy_loc, :][None, None]
+            out = L[Hs : Hs + gx_loc, Hs : Hs + gy_loc, :][None, None]
+            return out if rep_axis is None else out[None]
         # ---- fold halos: X phase (full-y slabs), then Y phase (interior-x)
         fwd_x = [(k, k + 1) for k in range(A - 1)]
         bwd_x = [(k, k - 1) for k in range(1, A)]
@@ -350,8 +356,28 @@ def build_pd(dom: Domain, mesh: Mesh, axes, n: int,
                              out_specs=out_specs))
 
 
+def prepare_pd_xt(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes,
+    cap: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Home-bucket points onto the (A, B) = (x-tile, t-tile) device grid."""
+    A, B = _mesh_sizes(mesh, axes)
+    pts = np.asarray(points, dtype=np.float32)
+    gx_loc = math.ceil(dom.Gx / A)
+    gt_loc = math.ceil(dom.Gt / B)
+    b = bucketing.bucket_points_home(
+        pts, dom, (gx_loc, dom.Gy, gt_loc), cap=cap
+    )
+    na, nt = b.ntiles[0], b.ntiles[2]
+    bp, bv = _pad_tile_grid(
+        b.points.reshape(na, nt, b.cap, 3),
+        b.valid.reshape(na, nt, b.cap).astype(np.float32), A, B)
+    return jnp.asarray(bp), jnp.asarray(bv)
+
+
 def build_pd_xt(dom: Domain, mesh: Mesh, axes, n: int,
-                ks=km.DEFAULT_KS, kt=km.DEFAULT_KT, rep_axis=None):
+                ks=km.DEFAULT_KS, kt=km.DEFAULT_KT, rep_axis=None,
+                collectives: bool = True):
     """PD split over (X, T) instead of (X, Y) — §Perf STKDE iteration.
 
     The halo a subdomain exchanges is its boundary thickened by the
@@ -359,6 +385,9 @@ def build_pd_xt(dom: Domain, mesh: Mesh, axes, n: int,
     Hs-wide ones. For long-duration instances (eBird: Gt=2435, Ht=5 vs
     Hs=30) this cuts halo traffic ~3x at identical work. Input layout:
     (A, B, cap, 3) buckets over (x-tile, t-tile).
+    ``collectives=False`` skips the halo ppermute folds (and rep psum) —
+    the reconciliation probe for the planner's ``comm_s`` term; the output
+    is then the unfolded interior (numerically incomplete by design).
     """
     ax, at = axes
     A, B = _mesh_sizes(mesh, axes)
@@ -380,7 +409,10 @@ def build_pd_xt(dom: Domain, mesh: Mesh, axes, n: int,
     else:
         in_specs = (P(rep_axis, ax, at, None, None),
                     P(rep_axis, ax, at, None))
-    out_specs = P(ax, at, None, None, None)
+    if rep_axis is not None and not collectives:
+        out_specs = P(rep_axis, ax, at, None, None, None)
+    else:
+        out_specs = P(ax, at, None, None, None)
 
     def f(pts_blk, val_blk):
         i = jax.lax.axis_index(ax).astype(jnp.float32)
@@ -394,6 +426,9 @@ def build_pd_xt(dom: Domain, mesh: Mesh, axes, n: int,
             ]
         )
         L = _pb(p - shift, ldom, variant="sym", ks=ks, kt=kt, n_total=n)
+        if not collectives:
+            out = L[Hs : Hs + gx_loc, :, Ht : Ht + gt_loc][None, None]
+            return out if rep_axis is None else out[None]
         # fold halos: X phase (full-t slabs), then T phase (interior-x)
         fwd_x = [(k, k + 1) for k in range(A - 1)]
         bwd_x = [(k, k - 1) for k in range(1, A)]
@@ -434,15 +469,7 @@ def stkde_pd_xt(
     n = int(n_total) if n_total is not None else len(pts)
     gx_loc = math.ceil(dom.Gx / A)
     gt_loc = math.ceil(dom.Gt / B)
-    b = bucketing.bucket_points_home(
-        pts, dom, (gx_loc, dom.Gy, gt_loc), cap=cap
-    )
-    na, nt = b.ntiles[0], b.ntiles[2]
-    bp, bv = _pad_tile_grid(
-        b.points.reshape(na, nt, b.cap, 3),
-        b.valid.reshape(na, nt, b.cap).astype(np.float32), A, B)
-    bpts = jnp.asarray(bp)
-    bval = jnp.asarray(bv)
+    bpts, bval = prepare_pd_xt(pts, dom, mesh, axes, cap=cap)
     fn = build_pd_xt(dom, mesh, axes, n, ks, kt)
     out = fn(bpts, bval)
     out = out.reshape(A, B, gx_loc, dom.Gy, gt_loc)
@@ -451,8 +478,30 @@ def stkde_pd_xt(
     return out[: dom.Gx, :, : dom.Gt]
 
 
+def prepare_pd_xyt(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes,
+    cap: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Home-bucket points onto the (A, B, C) = (x, y, t) device grid."""
+    A, B, C = _mesh_sizes(mesh, axes)
+    pts = np.asarray(points, dtype=np.float32)
+    gx_loc = math.ceil(dom.Gx / A)
+    gy_loc = math.ceil(dom.Gy / B)
+    gt_loc = math.ceil(dom.Gt / C)
+    b = bucketing.bucket_points_home(
+        pts, dom, (gx_loc, gy_loc, gt_loc), cap=cap
+    )
+    na, nb, nt = b.ntiles
+    pp = np.full((A, B, C, b.cap, 3), PARK, dtype=np.float32)
+    vv = np.zeros((A, B, C, b.cap), dtype=np.float32)
+    pp[:na, :nb, :nt] = b.points
+    vv[:na, :nb, :nt] = b.valid.astype(np.float32)
+    return jnp.asarray(pp), jnp.asarray(vv)
+
+
 def build_pd_xyt(dom: Domain, mesh: Mesh, axes, n: int,
-                 ks=km.DEFAULT_KS, kt=km.DEFAULT_KT):
+                 ks=km.DEFAULT_KS, kt=km.DEFAULT_KT,
+                 collectives: bool = True):
     """Full 3-D PD decomposition (the paper's A×B×C) for multi-pod meshes.
 
     Splits (X, Y, T) over three mesh axes — e.g. pod×data×model = 2×16×16
@@ -461,6 +510,9 @@ def build_pd_xyt(dom: Domain, mesh: Mesh, axes, n: int,
     while halo traffic stays proportional to subdomain surface; the
     cross-pod (DCN) direction is X, which exchanges only two
     Hs-thick slabs per build.
+    ``collectives=False`` skips all three halo-fold phases — the
+    reconciliation probe for the planner's ``comm_s`` term; the output is
+    then the unfolded interior (numerically incomplete by design).
     """
     ax, ay, at = axes
     A, B, C = _mesh_sizes(mesh, axes)
@@ -494,6 +546,9 @@ def build_pd_xyt(dom: Domain, mesh: Mesh, axes, n: int,
             ]
         )
         L = _pb(p - shift, ldom, variant="sym", ks=ks, kt=kt, n_total=n)
+        if not collectives:
+            out = L[Hs : Hs + gx_loc, Hs : Hs + gy_loc, Ht : Ht + gt_loc]
+            return out[None, None, None]
         # X phase (full-(y,t) slabs) -> Y phase (interior-x) -> T phase
         fwd = lambda nn: [(q, q + 1) for q in range(nn - 1)]
         bwd = lambda nn: [(q, q - 1) for q in range(1, nn)]
@@ -534,16 +589,9 @@ def stkde_pd_xyt(
     gx_loc = math.ceil(dom.Gx / A)
     gy_loc = math.ceil(dom.Gy / B)
     gt_loc = math.ceil(dom.Gt / C)
-    b = bucketing.bucket_points_home(
-        pts, dom, (gx_loc, gy_loc, gt_loc), cap=cap
-    )
-    na, nb, nt = b.ntiles
-    pp = np.full((A, B, C, b.cap, 3), PARK, dtype=np.float32)
-    vv = np.zeros((A, B, C, b.cap), dtype=np.float32)
-    pp[:na, :nb, :nt] = b.points
-    vv[:na, :nb, :nt] = b.valid.astype(np.float32)
+    bpts, bval = prepare_pd_xyt(pts, dom, mesh, axes, cap=cap)
     fn = build_pd_xyt(dom, mesh, axes, n, ks, kt)
-    out = fn(jnp.asarray(pp), jnp.asarray(vv))
+    out = fn(bpts, bval)
     out = out.reshape(A, B, C, gx_loc, gy_loc, gt_loc)
     out = out.transpose(0, 3, 1, 4, 2, 5).reshape(
         A * gx_loc, B * gy_loc, C * gt_loc)
@@ -551,6 +599,38 @@ def stkde_pd_xyt(
 
 
 # ------------------------------------------------------------------ hybrid
+def prepare_hybrid(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes,
+    rep_axis: str = "pod", cap: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Home-bucket points, then deal each bucket round-robin over ``rep``.
+
+    Returns (R, A, B, cap_r, 3) points and (R, A, B, cap_r) valid masks —
+    the input layout ``build_pd(..., rep_axis=...)`` expects.
+    """
+    A, B = _mesh_sizes(mesh, axes)
+    R = mesh.shape[rep_axis]
+    pts = np.asarray(points, dtype=np.float32)
+    gx_loc, gy_loc = _device_grid_dims(dom, A, B)
+    b = bucketing.bucket_points_home(
+        pts, dom, (gx_loc, gy_loc, dom.Gt), cap=cap
+    )
+    na, nb = b.ntiles[0], b.ntiles[1]
+    src, val = _pad_tile_grid(
+        b.points.reshape(na, nb, b.cap, 3),
+        b.valid.reshape(na, nb, b.cap).astype(np.float32), A, B)
+    # deal bucket contents over R replicas
+    cap_r = bucketing.round_up(max(1, -(-b.cap // R)), 8)
+    dpts = np.full((R, A, B, cap_r, 3), PARK, dtype=np.float32)
+    dval = np.zeros((R, A, B, cap_r), dtype=np.float32)
+    pos = np.arange(b.cap)
+    r_of = pos % R
+    p_of = pos // R
+    dpts[r_of, :, :, p_of] = np.transpose(src, (2, 0, 1, 3))
+    dval[r_of, :, :, p_of] = np.transpose(val, (2, 0, 1)).astype(np.float32)
+    return jnp.asarray(dpts), jnp.asarray(dval)
+
+
 def stkde_hybrid(
     points: np.ndarray,
     dom: Domain,
@@ -567,56 +647,31 @@ def stkde_hybrid(
     Every bucket's points are dealt round-robin over the rep axis — the
     moldable-task replication of the paper expressed as a mesh dimension.
     """
-    ax, ay = axes
-    A, B = _mesh_sizes(mesh, axes)
-    R = mesh.shape[rep_axis]
     pts = np.asarray(points, dtype=np.float32)
-    gx_loc, gy_loc = _device_grid_dims(dom, A, B)
-    b = bucketing.bucket_points_home(
-        pts, dom, (gx_loc, gy_loc, dom.Gt), cap=cap
-    )
-    # deal bucket contents over R replicas
-    cap_r = bucketing.round_up(max(1, -(-b.cap // R)), 8)
-    src = b.points.reshape(A, B, b.cap, 3)
-    val = b.valid.reshape(A, B, b.cap)
-    dpts = np.full((R, A, B, cap_r, 3), PARK, dtype=np.float32)
-    dval = np.zeros((R, A, B, cap_r), dtype=np.float32)
-    pos = np.arange(b.cap)
-    r_of = pos % R
-    p_of = pos // R
-    dpts[r_of, :, :, p_of] = np.transpose(src, (2, 0, 1, 3))
-    dval[r_of, :, :, p_of] = np.transpose(val, (2, 0, 1)).astype(np.float32)
     return stkde_pd(
         pts, dom, mesh, axes, cap=cap, ks=ks, kt=kt, n_total=n_total,
         _rep_axis=rep_axis,
-        _pts_override=(jnp.asarray(dpts), jnp.asarray(dval)),
+        _pts_override=prepare_hybrid(
+            pts, dom, mesh, axes, rep_axis=rep_axis, cap=cap),
     )
 
 
 # ------------------------------------------------------------------ DD-LPT
-def stkde_dd_lpt(
-    points: np.ndarray,
-    dom: Domain,
-    mesh: Mesh,
-    axes: Tuple[str, str] = ("data", "model"),
+def prepare_dd_lpt(
+    points: np.ndarray, dom: Domain, mesh: Mesh, axes,
     tile: Optional[Tuple[int, int, int]] = None,
     cap: Optional[int] = None,
-    ks: km.SpatialKernel = km.DEFAULT_KS,
-    kt: km.TemporalKernel = km.DEFAULT_KT,
-    n_total: Optional[int] = None,
-) -> jnp.ndarray:
-    """Fine-tile DD with LPT load-aware placement (PD-SCHED as placement).
+):
+    """Fine-tile bucket + LPT placement for DD-LPT.
 
-    Each device receives the k tiles LPT assigned to it (capacity-padded
-    "tile soup"), computes each tile's density with the separable contraction,
-    scatters them into a device-local grid, and the grids are summed — tiles
-    are disjoint, so the psum is pure assembly, not numerical reduction.
+    Returns ``((dpts, dval, dpos), ctx)`` where the first element is the
+    argument tuple for the jitted builder and ``ctx`` carries the
+    point-dependent static parameters (``tile``, ``k``, ``cap``,
+    ``ntiles``) that ``build_dd_lpt`` needs to compile.
     """
-    ax, ay = axes
     A, B = _mesh_sizes(mesh, axes)
     Ptot = A * B
     pts = np.asarray(points, dtype=np.float32)
-    n = int(n_total) if n_total is not None else len(pts)
     if tile is None:
         tile = bucketing.default_tile(dom)
     bx, by, bt = tile
@@ -638,7 +693,26 @@ def stkde_dd_lpt(
             dpts[p, s] = flat_pts[t]
             dval[p, s] = flat_val[t]
             dpos[p, s] = (ti * bx, tj * by, tk * bt)
+    args = (jnp.asarray(dpts), jnp.asarray(dval), jnp.asarray(dpos))
+    ctx = {"tile": tile, "k": k, "cap": capn, "ntiles": b.ntiles}
+    return args, ctx
 
+
+def build_dd_lpt(dom: Domain, mesh: Mesh, axes, n: int,
+                 tile: Tuple[int, int, int], k: int, cap: int,
+                 ntiles: Tuple[int, int, int],
+                 ks=km.DEFAULT_KS, kt=km.DEFAULT_KT,
+                 collectives: bool = True):
+    """Jitted DD-LPT over LPT-placed tile soup (dry-run lowerable).
+
+    Static parameters (``tile``, ``k``, ``cap``, ``ntiles``) come from
+    ``prepare_dd_lpt``'s ctx. ``collectives=False`` skips the tile-soup
+    assembly psum and returns the device-stacked partial grids — the
+    reconciliation probe for the planner's ``comm_s`` term.
+    """
+    ax, ay = axes
+    bx, by, bt = tile
+    ntx, nty, ntt = ntiles
     Gxp, Gyp, Gtp = ntx * bx, nty * by, ntt * bt
     norm = km.normalization(n, dom.hs, dom.ht)
 
@@ -676,9 +750,15 @@ def stkde_dd_lpt(
             jnp.zeros((Gxp, Gyp, Gtp), jnp.float32), (ax, ay), to="varying"
         )
         g = jax.lax.fori_loop(0, k, place, g0)
-        return jax.lax.psum(g, (ax, ay))
+        if collectives:
+            return jax.lax.psum(g, (ax, ay))
+        return g[None]
 
-    fn = shard_map(
+    out_specs = (
+        P(None, None, None) if collectives
+        else P((ax, ay), None, None, None)
+    )
+    return jax.jit(shard_map(
         f,
         mesh=mesh,
         in_specs=(
@@ -686,11 +766,36 @@ def stkde_dd_lpt(
             P((ax, ay), None, None),
             P((ax, ay), None, None),
         ),
-        out_specs=P(None, None, None),
+        out_specs=out_specs,
+    ))
+
+
+def stkde_dd_lpt(
+    points: np.ndarray,
+    dom: Domain,
+    mesh: Mesh,
+    axes: Tuple[str, str] = ("data", "model"),
+    tile: Optional[Tuple[int, int, int]] = None,
+    cap: Optional[int] = None,
+    ks: km.SpatialKernel = km.DEFAULT_KS,
+    kt: km.TemporalKernel = km.DEFAULT_KT,
+    n_total: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fine-tile DD with LPT load-aware placement (PD-SCHED as placement).
+
+    Each device receives the k tiles LPT assigned to it (capacity-padded
+    "tile soup"), computes each tile's density with the separable contraction,
+    scatters them into a device-local grid, and the grids are summed — tiles
+    are disjoint, so the psum is pure assembly, not numerical reduction.
+    """
+    pts = np.asarray(points, dtype=np.float32)
+    n = int(n_total) if n_total is not None else len(pts)
+    args, ctx = prepare_dd_lpt(pts, dom, mesh, axes, tile=tile, cap=cap)
+    fn = build_dd_lpt(
+        dom, mesh, axes, n, ctx["tile"], ctx["k"], ctx["cap"],
+        ctx["ntiles"], ks, kt,
     )
-    out = jax.jit(fn)(
-        jnp.asarray(dpts), jnp.asarray(dval), jnp.asarray(dpos)
-    )
+    out = fn(*args)
     return out[: dom.Gx, : dom.Gy, : dom.Gt]
 
 
@@ -737,7 +842,10 @@ def execute_chunk(
     kw = dict(axes=axes, ks=ks, kt=kt, n_total=n_total)
     if strategy == "hybrid":
         kw["rep_axis"] = rep_axis or "pod"
-    elif cap is not None and strategy in ("dd", "pd", "pd_xt", "pd_xyt"):
+    if strategy == "pd_xyt" and len(axes) == 2:
+        # 3-D split needs a third mesh axis: the rep axis becomes the X cut
+        kw["axes"] = (rep_axis or "pod",) + tuple(axes)
+    if cap is not None and strategy in ("dd", "pd", "pd_xt", "pd_xyt"):
         # fixed bucket capacity keeps the jitted shapes identical across
         # chunks (one compile per (strategy, mesh), not per chunk)
         kw["cap"] = cap

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -44,10 +43,16 @@ def stkde_tiled(
     kt: km.TemporalKernel = km.DEFAULT_KT,
     interpret: Optional[bool] = None,
     use_ref: bool = False,
+    mode: str = "auto",
 ) -> jnp.ndarray:
-    """STKDE density grid via the tiled PB-SYM GEMM kernel."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    """STKDE density grid via the tiled PB-SYM GEMM kernel.
+
+    ``mode`` ("auto" | "interpret" | "compiled") selects how the Pallas
+    kernel executes — see ``stkde_tiles_pallas``. ``"auto"`` compiles on
+    TPU and interprets elsewhere. The three-state ``interpret`` bool is
+    deprecated (True -> "interpret", False -> "compiled"); passing it
+    emits a DeprecationWarning.
+    """
     pts = np.asarray(points, dtype=np.float32)
     n = len(pts)
     if tile is None:
@@ -72,6 +77,7 @@ def stkde_tiled(
         padded = _ref.stkde_tiles_ref(*args, dom, tile, n, ks, kt)
     else:
         padded = stkde_tiles_pallas(
-            *args, dom, tile, cap_eff, n, chunk_eff, ks, kt, interpret
+            *args, dom, tile, cap_eff, n, chunk_eff, ks, kt,
+            interpret=interpret, mode=mode,
         )
     return padded[: dom.Gx, : dom.Gy, : dom.Gt]

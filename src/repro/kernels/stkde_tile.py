@@ -24,6 +24,7 @@ Grid = (ntx, nty, ntt) output tiles; x/y/t are embarrassingly parallel
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -32,6 +33,31 @@ from jax.experimental import pallas as pl
 
 from repro.core.geometry import Domain
 from repro.core import kernels_math as km
+
+# execution modes for the Pallas kernel entry points
+MODES = ("auto", "interpret", "compiled")
+
+
+def resolve_mode(mode: str, interpret: Optional[bool],
+                 caller: str) -> bool:
+    """Fold the deprecated ``interpret`` bool into ``mode`` and resolve
+    ``"auto"`` against the active backend. Returns the effective
+    interpret flag for ``pl.pallas_call``."""
+    if interpret is not None:
+        warnings.warn(
+            f"{caller}(interpret=...) is deprecated; use "
+            "mode='interpret' | 'compiled' | 'auto' instead",
+            DeprecationWarning, stacklevel=3)
+        if mode != "auto":
+            raise ValueError(
+                f"pass either mode={mode!r} or the deprecated interpret "
+                "bool, not both")
+        mode = "interpret" if interpret else "compiled"
+    if mode == "auto":
+        return jax.default_backend() != "tpu"
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    return mode == "interpret"
 
 
 def _kernel(
@@ -91,12 +117,6 @@ def _kernel(
     out_ref[...] = acc.reshape(bx, by, bt)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "dom", "tile", "cap", "chunk", "n_total", "ks", "kt", "interpret"
-    ),
-)
 def stkde_tiles_pallas(
     pts_tiles: jnp.ndarray,    # (ntx, nty, ntt, cap, 3) f32
     valid_tiles: jnp.ndarray,  # (ntx, nty, ntt, cap) f32
@@ -107,9 +127,42 @@ def stkde_tiles_pallas(
     chunk: int = 256,
     ks: km.SpatialKernel = km.DEFAULT_KS,
     kt: km.TemporalKernel = km.DEFAULT_KT,
+    interpret: Optional[bool] = None,
+    mode: str = "auto",
+) -> jnp.ndarray:
+    """Padded density grid (ntx*bx, nty*by, ntt*bt).
+
+    ``mode`` selects kernel execution: ``"compiled"`` lowers through
+    Mosaic (TPU), ``"interpret"`` runs the kernel body under the Pallas
+    interpreter (bitwise-faithful, any backend, slow), ``"auto"``
+    (default) picks compiled on TPU and interpret elsewhere. The
+    ``interpret`` bool is deprecated — it maps True -> "interpret",
+    False -> "compiled" with a DeprecationWarning.
+    """
+    return _stkde_tiles_pallas(
+        pts_tiles, valid_tiles, dom, tile, cap, n_total, chunk, ks, kt,
+        resolve_mode(mode, interpret, "stkde_tiles_pallas"),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "dom", "tile", "cap", "chunk", "n_total", "ks", "kt", "interpret"
+    ),
+)
+def _stkde_tiles_pallas(
+    pts_tiles: jnp.ndarray,
+    valid_tiles: jnp.ndarray,
+    dom: Domain,
+    tile: Tuple[int, int, int],
+    cap: int,
+    n_total: int,
+    chunk: int = 256,
+    ks: km.SpatialKernel = km.DEFAULT_KS,
+    kt: km.TemporalKernel = km.DEFAULT_KT,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Padded density grid (ntx*bx, nty*by, ntt*bt)."""
     ntx, nty, ntt = pts_tiles.shape[:3]
     bx, by, bt = tile
     chunk = min(chunk, cap)

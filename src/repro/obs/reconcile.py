@@ -22,19 +22,30 @@ inside one jitted program):
 
 All timings flow through ``obs.timing.timeit`` (shared warmup +
 block_until_ready) and therefore appear as spans in the Chrome trace.
+
+Probe registry
+--------------
+
+Every probed strategy is one ``StrategyProbe`` entry in ``PROBED`` — a
+declarative spec binding the strategy's prepare/build pair from
+``distributed/stkde_dist.py`` to the probe protocol above. The registry is
+the single source of truth for what can be reconciled: ``run``'s default
+strategy list, ``measure_strategy``'s error message, and
+``plan.calibrate_host``'s row filter are all derived from its keys.
+Registering an eighth strategy = adding ``collectives=False`` support to
+its builder in ``stkde_dist.py`` + one ``PROBED`` entry here (see
+docs/observability.md).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import timing, trace
 
 TERMS = ("init_s", "compute_s", "comm_s", "total_s")
-
-# strategies with a full phase-probe implementation
-PROBED = ("dr", "dd", "pd")
 
 
 def _default_hw():
@@ -45,45 +56,263 @@ def _default_hw():
     return plan.default_hw()
 
 
+def _sd():
+    """Lazy import: keep ``repro.obs`` importable without pulling in jax."""
+    from repro.distributed import stkde_dist
+
+    return stkde_dist
+
+
+def _axes_all(mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _axes_workers(mesh) -> Tuple[str, ...]:
+    """The worker (grid-sharding) axes: the *last two* mesh axes.
+
+    On a 3-axis mesh the leading axis stays replicated (2-D strategies)
+    or serves as the replication axis (hybrid)."""
+    return tuple(mesh.axis_names)[-2:]
+
+
+def _axes_xyz(mesh) -> Tuple[str, ...]:
+    names = tuple(mesh.axis_names)
+    if len(names) != 3:
+        raise ValueError(
+            f"pd_xyt probe needs a 3-axis (x, y, t) mesh, got {names}")
+    return names
+
+
+def _rep_axis(mesh, axes) -> str:
+    """First mesh axis not claimed by the worker grid (hybrid's rep)."""
+    rest = [a for a in mesh.axis_names if a not in axes]
+    if not rest:
+        raise ValueError(
+            f"hybrid probe needs a rep axis outside the worker axes {axes};"
+            f" mesh has only {tuple(mesh.axis_names)}")
+    return rest[0]
+
+
+def _worker_dims(dom, mesh, axes) -> Tuple[int, int]:
+    A, B = (mesh.shape[a] for a in axes)
+    return _sd()._device_grid_dims(dom, A, B)
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategyProbe:
+    """Declarative phase-probe spec for one strategy.
+
+    prepare(pts, dom, mesh, axes, cap) -> (args, ctx)
+        Host-side bucketing/layout. ``args`` is the positional argument
+        tuple for the built callables; ``ctx`` carries point-dependent
+        *static* parameters the builders need to compile (e.g. DD-LPT's
+        tile/k/cap/ntiles) — empty for most strategies.
+    build(dom, mesh, axes, n, ctx) -> fn
+        The production (collectives-on) jitted strategy.
+    build_nocomm(dom, mesh, axes, n, ctx) -> fn, or None
+        Same compute with collectives stripped. ``None`` declares the
+        strategy communication-free (DD): the full build is reused and
+        measured comm is exactly 0.
+    local_shape(dom, mesh, axes, ctx) -> tuple
+        Per-device grid buffer shape — the memset probe for ``init_s``.
+    default_axes(mesh) -> axes
+        The mesh axes the strategy spans when the caller passes none.
+    plan_shape(mesh, axes) -> mesh_shape
+        The shape handed to ``plan.estimate`` so the prediction prices
+        the same decomposition the probe measures ((A, B), (R, A, B), or
+        pd_xyt's (X, Y, T)).
+    """
+
+    prepare: Callable
+    build: Callable
+    build_nocomm: Optional[Callable]
+    local_shape: Callable
+    default_axes: Callable
+    plan_shape: Callable
+
+
+def _probe_dr() -> StrategyProbe:
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            ((_sd().prepare_dr(pts, dom, mesh, axes),), {}),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_dr(dom, mesh, axes, n),
+        build_nocomm=lambda dom, mesh, axes, n, ctx:
+            _sd().build_dr(dom, mesh, axes, n, collectives=False),
+        local_shape=lambda dom, mesh, axes, ctx: dom.grid_shape,
+        default_axes=_axes_all,
+        plan_shape=lambda mesh, axes:
+            (1, int(np.prod([mesh.shape[a] for a in axes]))),
+    )
+
+
+def _probe_dd() -> StrategyProbe:
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            (_sd().prepare_dd(pts, dom, mesh, axes, cap=cap), {}),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_dd(dom, mesh, axes, n),
+        build_nocomm=None,                  # DD is communication-free
+        local_shape=lambda dom, mesh, axes, ctx:
+            _worker_dims(dom, mesh, axes) + (dom.Gt,),
+        default_axes=_axes_workers,
+        plan_shape=lambda mesh, axes: tuple(mesh.shape[a] for a in axes),
+    )
+
+
+def _probe_pd() -> StrategyProbe:
+    def shape(dom, mesh, axes, ctx):
+        gx, gy = _worker_dims(dom, mesh, axes)
+        return (gx + 2 * dom.Hs, gy + 2 * dom.Hs, dom.Gt)
+
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            (_sd().prepare_pd(pts, dom, mesh, axes, cap=cap), {}),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd(dom, mesh, axes, n),
+        build_nocomm=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd(dom, mesh, axes, n, collectives=False),
+        local_shape=shape,
+        default_axes=_axes_workers,
+        plan_shape=lambda mesh, axes: tuple(mesh.shape[a] for a in axes),
+    )
+
+
+def _probe_pd_xt() -> StrategyProbe:
+    import math
+
+    def shape(dom, mesh, axes, ctx):
+        A, B = (mesh.shape[a] for a in axes)
+        gx = math.ceil(dom.Gx / A)
+        gt = math.ceil(dom.Gt / B)
+        return (gx + 2 * dom.Hs, dom.Gy, gt + 2 * dom.Ht)
+
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            (_sd().prepare_pd_xt(pts, dom, mesh, axes, cap=cap), {}),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd_xt(dom, mesh, axes, n),
+        build_nocomm=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd_xt(dom, mesh, axes, n, collectives=False),
+        local_shape=shape,
+        default_axes=_axes_workers,
+        plan_shape=lambda mesh, axes: tuple(mesh.shape[a] for a in axes),
+    )
+
+
+def _probe_pd_xyt() -> StrategyProbe:
+    import math
+
+    def shape(dom, mesh, axes, ctx):
+        A, B, C = (mesh.shape[a] for a in axes)
+        return (
+            math.ceil(dom.Gx / A) + 2 * dom.Hs,
+            math.ceil(dom.Gy / B) + 2 * dom.Hs,
+            math.ceil(dom.Gt / C) + 2 * dom.Ht,
+        )
+
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            (_sd().prepare_pd_xyt(pts, dom, mesh, axes, cap=cap), {}),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd_xyt(dom, mesh, axes, n),
+        build_nocomm=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd_xyt(dom, mesh, axes, n, collectives=False),
+        local_shape=shape,
+        default_axes=_axes_xyz,
+        plan_shape=lambda mesh, axes: tuple(mesh.shape[a] for a in axes),
+    )
+
+
+def _probe_dd_lpt() -> StrategyProbe:
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            _sd().prepare_dd_lpt(pts, dom, mesh, axes, cap=cap),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_dd_lpt(dom, mesh, axes, n, ctx["tile"], ctx["k"],
+                               ctx["cap"], ctx["ntiles"]),
+        build_nocomm=lambda dom, mesh, axes, n, ctx:
+            _sd().build_dd_lpt(dom, mesh, axes, n, ctx["tile"], ctx["k"],
+                               ctx["cap"], ctx["ntiles"],
+                               collectives=False),
+        local_shape=lambda dom, mesh, axes, ctx: tuple(
+            nt * b for nt, b in zip(ctx["ntiles"], ctx["tile"])),
+        default_axes=_axes_workers,
+        plan_shape=lambda mesh, axes: tuple(mesh.shape[a] for a in axes),
+    )
+
+
+def _probe_hybrid() -> StrategyProbe:
+    def shape(dom, mesh, axes, ctx):
+        gx, gy = _worker_dims(dom, mesh, axes)
+        return (gx + 2 * dom.Hs, gy + 2 * dom.Hs, dom.Gt)
+
+    return StrategyProbe(
+        prepare=lambda pts, dom, mesh, axes, cap:
+            (_sd().prepare_hybrid(pts, dom, mesh, axes,
+                                  rep_axis=_rep_axis(mesh, axes), cap=cap),
+             {}),
+        build=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd(dom, mesh, axes, n,
+                           rep_axis=_rep_axis(mesh, axes)),
+        build_nocomm=lambda dom, mesh, axes, n, ctx:
+            _sd().build_pd(dom, mesh, axes, n,
+                           rep_axis=_rep_axis(mesh, axes),
+                           collectives=False),
+        local_shape=shape,
+        default_axes=_axes_workers,
+        plan_shape=lambda mesh, axes:
+            (mesh.shape[_rep_axis(mesh, axes)],)
+            + tuple(mesh.shape[a] for a in axes),
+    )
+
+
+# strategy name -> phase-probe spec; the full set the planner can be
+# reconciled against. Iteration order is report order.
+PROBED: Dict[str, StrategyProbe] = {
+    "dr": _probe_dr(),
+    "dd": _probe_dd(),
+    "pd": _probe_pd(),
+    "pd_xt": _probe_pd_xt(),
+    "pd_xyt": _probe_pd_xyt(),
+    "dd_lpt": _probe_dd_lpt(),
+    "hybrid": _probe_hybrid(),
+}
+
+
 def measure_strategy(
     points: np.ndarray,
     dom,
     mesh,
     strategy: str,
-    axes: Tuple[str, str] = ("data", "model"),
+    axes: Optional[Tuple[str, ...]] = None,
     reps: int = 3,
     cap: Optional[int] = None,
 ) -> Dict[str, float]:
-    """Measured init/compute/comm/total seconds for one strategy."""
+    """Measured init/compute/comm/total seconds for one strategy.
+
+    ``axes=None`` uses the strategy's ``default_axes`` on the given mesh
+    (worker-2D strategies span the last two axes; dr spans all; pd_xyt
+    needs exactly three).
+    """
     import jax
     import jax.numpy as jnp
 
-    from repro.distributed import stkde_dist as sd
-
-    if strategy not in PROBED:
-        raise ValueError(f"phase probes implemented for {PROBED}, "
+    spec = PROBED.get(strategy)
+    if spec is None:
+        raise ValueError(f"phase probes implemented for {tuple(PROBED)}, "
                          f"got {strategy!r}")
     pts = np.asarray(points, dtype=np.float32)
     n = len(pts)
-    A, B = (mesh.shape[a] for a in axes)
-    gx_loc, gy_loc = sd._device_grid_dims(dom, A, B)
+    if axes is None:
+        axes = spec.default_axes(mesh)
 
     with trace.span(f"reconcile.{strategy}.prepare", n=n):
-        if strategy == "dr":
-            args = (sd.prepare_dr(pts, dom, mesh, axes),)
-            local_shape = dom.grid_shape
-            full = sd.build_dr(dom, mesh, axes, n)
-            nocomm = sd.build_dr(dom, mesh, axes, n, collectives=False)
-        elif strategy == "dd":
-            args = sd.prepare_dd(pts, dom, mesh, axes, cap=cap)
-            local_shape = (gx_loc, gy_loc, dom.Gt)
-            full = sd.build_dd(dom, mesh, axes, n)
-            nocomm = full                       # DD is communication-free
-        else:  # pd
-            args = sd.prepare_pd(pts, dom, mesh, axes, cap=cap)
-            local_shape = (gx_loc + 2 * dom.Hs, gy_loc + 2 * dom.Hs, dom.Gt)
-            full = sd.build_pd(dom, mesh, axes, n)
-            nocomm = sd.build_pd(dom, mesh, axes, n, collectives=False)
+        args, ctx = spec.prepare(pts, dom, mesh, axes, cap)
+        local_shape = spec.local_shape(dom, mesh, axes, ctx)
+        full = spec.build(dom, mesh, axes, n, ctx)
+        nocomm = (full if spec.build_nocomm is None
+                  else spec.build_nocomm(dom, mesh, axes, n, ctx))
 
     memset = jax.jit(lambda v: jnp.full(local_shape, v, jnp.float32))
     t_init = timing.timeit(
@@ -157,37 +386,65 @@ def run(
     points: np.ndarray,
     dom,
     mesh,
-    strategies: Sequence[str] = PROBED,
-    axes: Tuple[str, str] = ("data", "model"),
+    strategies: Optional[Sequence[str]] = None,
+    axes: Optional[Tuple[str, ...]] = None,
     reps: int = 3,
     hw=None,
 ) -> Dict:
-    """Full reconciliation: plan, measure, join. Returns rows + report."""
+    """Full reconciliation: plan, measure, join. Returns rows + report.
+
+    ``strategies`` defaults to every registry key; ``axes=None`` lets each
+    strategy pick its ``default_axes`` on the mesh (the recommended mode
+    on a 3-axis mesh, where dr/pd_xyt/hybrid span different axis sets).
+    Predictions are computed per strategy with its ``plan_shape`` so the
+    planner prices the same decomposition the probe measures.
+    """
     from repro.core import bucketing, plan
 
     pts = np.asarray(points, dtype=np.float32)
-    A, B = (mesh.shape[a] for a in axes)
+    if strategies is None:
+        strategies = tuple(PROBED)
     hw = hw or _default_hw()
-    from repro.distributed.stkde_dist import _device_grid_dims
 
-    gx_loc, gy_loc = _device_grid_dims(dom, A, B)
+    # block imbalance measured on the worker home-bucket grid; shared by
+    # every strategy's prediction (plan.estimate re-partitions per shape)
+    wa, wb = _axes_workers(mesh)
+    A, B = mesh.shape[wa], mesh.shape[wb]
+    gx_loc, gy_loc = _sd()._device_grid_dims(dom, A, B)
     loads = bucketing.bucket_points_home(
         pts, dom, (gx_loc, gy_loc, dom.Gt)
     ).counts.reshape(-1).astype(np.float64)
-    predicted = plan.estimate(dom, len(pts), (A, B), loads=loads, hw=hw)
 
-    measured = {}
-    with trace.span("reconcile.measure", mesh=f"{A}x{B}"):
+    mesh_str = "x".join(str(int(mesh.shape[a])) for a in mesh.axis_names)
+    predicted: Dict[str, Dict[str, float]] = {}
+    measured: Dict[str, Dict[str, float]] = {}
+    with trace.span("reconcile.measure", mesh=mesh_str):
         for strat in strategies:
+            spec = PROBED.get(strat)
+            if spec is None:
+                raise ValueError(
+                    f"phase probes implemented for {tuple(PROBED)}, "
+                    f"got {strat!r}")
+            s_axes = axes if axes is not None else spec.default_axes(mesh)
+            table = plan.estimate(
+                dom, len(pts), spec.plan_shape(mesh, s_axes),
+                loads=loads, hw=hw)
+            predicted[strat] = table[strat]
             measured[strat] = measure_strategy(
-                pts, dom, mesh, strat, axes=axes, reps=reps
+                pts, dom, mesh, strat, axes=s_axes, reps=reps
             )
     rows = reconcile(predicted, measured)
+    if hw is plan.HOST:
+        hw_name = "host"
+    elif hw is plan.HOST_SEED:
+        hw_name = "host_seed"
+    else:
+        hw_name = "v5e"
     return {
-        "mesh": f"{A}x{B}",
+        "mesh": mesh_str,
         "n": int(len(pts)),
         "grid": f"{dom.Gx}x{dom.Gy}x{dom.Gt}",
-        "hw": "host" if hw is plan.HOST else "v5e",
+        "hw": hw_name,
         "rows": rows,
         "report": report_text(rows),
     }

@@ -129,7 +129,9 @@ def test_timeit_records_span_and_histogram():
 
 
 # -------------------------------------------------------------- reconcile
-def test_reconcile_smoke_8dev():
+def test_reconcile_smoke_8dev_all_registry_strategies():
+    """reconcile.run on a 2x2x2 mesh probes every PROBED strategy and
+    emits all four terms per strategy — no silently missing rows."""
     out = run_with_devices(
         """
 import json
@@ -140,8 +142,9 @@ from repro.obs import reconcile
 
 dom = Domain(gx=48.0, gy=48.0, gt=16.0, sres=1.0, tres=1.0, hs=3.0, ht=2.0)
 pts = clustered_events(1500, dom, seed=0)
-mesh = jax.make_mesh((4, 2), ("data", "model"))
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 res = reconcile.run(pts, dom, mesh, reps=1)
+res["_probed"] = list(reconcile.PROBED)
 print("RESULT" + json.dumps(res))
 """,
         n_devices=8,
@@ -149,13 +152,27 @@ print("RESULT" + json.dumps(res))
     line = [ln for ln in out.splitlines() if ln.startswith("RESULT")][0]
     res = json.loads(line[len("RESULT"):])
     strategies = {r["strategy"] for r in res["rows"]}
-    assert {"dr", "dd", "pd"} <= strategies
+    assert strategies == set(res["_probed"])
+    assert {"dr", "dd", "pd", "pd_xt", "pd_xyt", "dd_lpt",
+            "hybrid"} <= strategies
+    for strat in strategies:
+        terms = {r["term"] for r in res["rows"] if r["strategy"] == strat}
+        assert terms == reconcile_terms(), (strat, terms)
     for r in res["rows"]:
-        assert r["term"] in reconcile_terms()
         assert r["measured_s"] >= 0
         if r["predicted_s"] is not None:
             assert r["rel_err"] is not None
     assert "strategy" in res["report"]
+
+
+def test_measure_strategy_error_lists_registry_keys():
+    from repro.obs import reconcile
+
+    with pytest.raises(ValueError) as ei:
+        reconcile.measure_strategy(
+            np.zeros((1, 3), np.float32), None, None, "nope")
+    for name in reconcile.PROBED:
+        assert name in str(ei.value)
 
 
 def reconcile_terms():

@@ -128,6 +128,7 @@ class TestPlanner:
 
         dom = Domain(gx=131, gy=61, gt=84, sres=1, tres=1, hs=2, ht=3)
         _, table = plan.choose(dom, 588_189, (2, 16, 16))
-        assert set(table) == {"dr", "dd", "pd", "pd_xt", "dd_lpt", "hybrid"}
+        assert set(table) == {"dr", "dd", "pd", "pd_xt", "pd_xyt",
+                              "dd_lpt", "hybrid"}
         for v in table.values():
             assert v["total_s"] > 0
